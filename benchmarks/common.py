@@ -1,0 +1,139 @@
+"""Shared harness for the paper-table benchmarks.
+
+All accuracy benchmarks follow the paper's protocol at test scale: a ViT is
+"pretrained" on a broad synthetic image task, then fine-tuned on a narrower
+task under a schedule produced by D2FT or a baseline scheduler, and top-1
+accuracy is compared at matched compute/communication budgets.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import D2FTConfig
+from repro.core import baselines
+from repro.core.d2ft import plan_schedule
+from repro.core.schedule import Schedule
+from repro.core.scores import compute_scores, vit_blocks, weight_magnitude
+from repro.data.synthetic import image_batches, make_image_task
+from repro.models.vit import ViTConfig, init_vit, vit_loss
+from repro.optim.optimizers import sgd
+from repro.train.loop import eval_vit, finetune_vit
+
+VIT = ViTConfig(n_layers=2, d_model=96, n_heads=6, d_ff=192, patch=8,
+                image_size=32, n_classes=10)
+N_MB = 5
+BATCH = 40
+FT_STEPS = 16
+LR = 0.05
+NOISE = 1.3    # calibrated so budget orderings are visible (not saturated)
+
+_cache = {}
+
+
+def pretrained_vit():
+    """Pretrain once per process on the 'upstream' synthetic task."""
+    if "params" not in _cache:
+        task_up = make_image_task(101, n_classes=10, image_size=32,
+                                  noise=0.5)
+        params = init_vit(jax.random.PRNGKey(0), VIT)
+        params, _, _ = finetune_vit(params, VIT, sgd(LR),
+                                    image_batches(task_up, 1, BATCH, 25),
+                                    steps=25)
+        _cache["params"] = params
+    return jax.tree.map(jnp.copy, _cache["params"])
+
+
+def downstream_task(seed=3):
+    return make_image_task(seed, n_classes=10, image_size=32, noise=NOISE)
+
+
+def vit_loss_fn(params, mb):
+    return vit_loss(params, jnp.asarray(mb[0]), jnp.asarray(mb[1]), VIT)[0]
+
+
+def vit_scores(params, images, labels, G=None,
+               backward="weight_magnitude", forward="fisher", n_mb=N_MB):
+    G = G or VIT.n_heads
+    mbs = list(zip(np.split(images, n_mb), np.split(labels, n_mb)))
+    return compute_scores(vit_loss_fn, params, vit_blocks, mbs, G,
+                          backward_metric=backward, forward_metric=forward)
+
+
+def d2ft_schedule_fn(d2: D2FTConfig, G=None, refresh=16, backward=None,
+                     forward=None, cap_pf=None, cap_po=None):
+    G = G or VIT.n_heads
+
+    def fn(step, params, images, labels):
+        if step % refresh != 0:
+            return None
+        bw, fw = vit_scores(params, images, labels, G,
+                            backward or d2.backward_score,
+                            forward or d2.forward_score,
+                            n_mb=d2.n_microbatches)
+        return plan_schedule(d2, bw, fw, VIT.n_layers, G, cap_pf=cap_pf,
+                             cap_po=cap_po)
+    return fn
+
+
+def random_schedule_fn(d2: D2FTConfig, G=None, seed=0):
+    G = G or VIT.n_heads
+    rng = np.random.default_rng(seed)
+
+    def fn(step, params, images, labels):
+        return baselines.random_schedule(rng, VIT.n_layers, G, d2.n_microbatches,
+                                         d2.n_pf, d2.n_po)
+    return fn
+
+
+def dpruning_schedule_fn(keep: float, mode="m", G=None, refresh=16):
+    G = G or VIT.n_heads
+
+    def fn(step, params, images, labels):
+        if step % refresh != 0:
+            return None
+        blocks = vit_blocks(params)
+        imp = weight_magnitude(blocks, G).reshape(-1)
+        if mode == "mg":
+            bw, _ = vit_scores(params, images, labels, G,
+                               backward="gradient_magnitude",
+                               forward="gradient_magnitude")
+            imp = imp * bw.mean(1)
+        return baselines.dpruning_schedule(imp, VIT.n_layers, G, N_MB,
+                                           keep)
+    return fn
+
+
+def gshard_schedule_fn(capacity: int, G=None, seed=0):
+    G = G or VIT.n_heads
+    rng = np.random.default_rng(seed)
+
+    def fn(step, params, images, labels):
+        gate = rng.random((VIT.n_layers * G, N_MB))
+        return baselines.gshard_schedule(rng, gate, VIT.n_layers, G, capacity)
+    return fn
+
+
+def run_finetune(schedule_fn: Optional[Callable], task=None, steps=FT_STEPS,
+                 seed=5, n_mb=N_MB, cfg=None, params=None):
+    cfg = cfg or VIT
+    task = task or downstream_task()
+    params = params if params is not None else pretrained_vit()
+    t0 = time.perf_counter()
+    params, _, log = finetune_vit(params, cfg, sgd(LR),
+                                  image_batches(task, seed, BATCH, steps),
+                                  steps=steps, schedule_fn=schedule_fn,
+                                  n_microbatches=n_mb)
+    wall = time.perf_counter() - t0
+    acc = eval_vit(params, cfg, image_batches(task, 7, BATCH, 5))
+    return acc, wall / max(steps, 1), log
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,65 @@
+"""D2FT-LoRA (paper §II-D): freeze the base model, fine-tune low-rank
+adapters under a D2FT schedule; includes the fused Pallas LoRA matmul.
+
+  PYTHONPATH=src python examples/lora_finetune.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import D2FTConfig, ModelConfig
+from repro.core.lora import init_lora, merge_lora, lora_param_count
+from repro.core.d2ft import plan_schedule
+from repro.core.schedule import gates_from_schedule
+from repro.core.scores import compute_scores, transformer_blocks
+from repro.data.synthetic import lm_batches, microbatch_assignment, split_microbatches
+from repro.kernels.ops import lora_linear
+from repro.models.transformer import init_model, lm_loss
+from repro.optim.optimizers import sgd
+
+cfg = ModelConfig(name="base", arch_type="dense", n_layers=4, d_model=128,
+                  n_heads=4, n_kv_heads=4, d_ff=256, vocab_size=1024)
+base = init_model(jax.random.PRNGKey(0), cfg)
+lora = init_lora(jax.random.PRNGKey(1), base, rank=8)
+print(f"adapters: {lora_param_count(lora)} trainable params "
+      f"({len(lora)} targets)")
+
+# the fused kernel: x·W + s·(x·A)·B without materializing x·A in HBM
+entry = lora["cycles/0/attn/wq"]
+x = jax.random.normal(jax.random.PRNGKey(2), (128, cfg.d_model))
+y = lora_linear(x, base["cycles"][0]["attn"]["wq"][0], entry["a"][0],
+                entry["b"][0], scale=2.0)
+print(f"fused lora_linear output: {y.shape}")
+
+d2 = D2FTConfig(n_microbatches=4, n_pf=3, n_po=0, head_groups=4)
+opt = sgd(0.1)
+state = opt.init(lora)
+batches = list(lm_batches(0, cfg.vocab_size, 8, 64, 60))
+
+# scoring pass on merged model (weight magnitude of frozen weights backward,
+# fisher of adapter grads forward)
+mbs = split_microbatches(batches[0], 4)
+def loss_fn(p, mb):
+    return lm_loss(p, cfg, mb["tokens"], mb["labels"])[0]
+bw, fw = compute_scores(loss_fn, merge_lora(base, lora, 1.0),
+                        lambda t: transformer_blocks(t, cfg), mbs, G=4)
+sched = plan_schedule(d2, bw, fw, cfg.n_layers, 4)
+mb_of = microbatch_assignment(8, 4)
+gates = gates_from_schedule(sched, mb_of)
+
+@jax.jit
+def step(lora_p, st, batch):
+    def loss(lr):
+        merged = merge_lora(base, lr, 1.0)
+        return lm_loss(merged, cfg, batch["tokens"], batch["labels"],
+                       gates=gates)[0]
+    l, g = jax.value_and_grad(loss)(lora_p)
+    lora_p, st = opt.update(g, st, lora_p)
+    return lora_p, st, l
+
+losses = []
+for batch in batches:
+    lora, state, l = step(lora, state, batch)
+    losses.append(float(l))
+print(f"D2FT-LoRA loss: {np.mean(losses[:5]):.3f} -> "
+      f"{np.mean(losses[-5:]):.3f}")

@@ -1,0 +1,121 @@
+"""Schedule table construction and gate materialization (paper Algorithm 1).
+
+A ``ScheduleTable`` is an int8 array [K, N] over subnets k and micro-batches
+i with entries  1 = p_f (full),  2 = p_o (forward-only),  3 = p_s (shortcut)
+— the exact encoding of Algorithm 1.
+
+Subnets are indexed k = l * G + g for layer l and head-group g; this module
+converts tables to the (g_f, g_b) gate arrays consumed by
+models.transformer.forward and to packed-path gather indices.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+P_F, P_O, P_S = 1, 2, 3
+
+
+@dataclass
+class Schedule:
+    table: np.ndarray          # [K, N] int8 in {1,2,3}
+    n_layers: int
+    n_groups: int              # G (subnets per layer)
+
+    @property
+    def n_microbatches(self) -> int:
+        return self.table.shape[1]
+
+    def layer_group_view(self) -> np.ndarray:
+        return self.table.reshape(self.n_layers, self.n_groups, -1)
+
+
+def merge_tables(sel_pf: np.ndarray, sel_po: np.ndarray) -> np.ndarray:
+    """Algorithm 1 lines 14-31. sel_pf, sel_po: [K, N] bool."""
+    table = np.full(sel_pf.shape, P_S, np.int8)
+    table[sel_po] = P_O
+    table[sel_pf] = P_F            # p_f wins conflicts (line 23-25)
+    return table
+
+
+def build_schedule(backward_scores: np.ndarray, forward_scores: np.ndarray,
+                   n_layers: int, n_groups: int, *, c_f: float, c_b: float,
+                   cap_pf, cap_po, resolution: int = 100) -> Schedule:
+    """Run the bi-level knapsack for every subnet (= device) independently.
+
+    backward_scores / forward_scores: [K, N]; cap_pf / cap_po: scalar or [K]
+    per-device capacities (heterogeneity support, paper §IV-D).
+    """
+    from repro.core.knapsack import bilevel_select
+    K, N = backward_scores.shape
+    cap_pf = np.broadcast_to(np.asarray(cap_pf, np.float64), (K,))
+    cap_po = np.broadcast_to(np.asarray(cap_po, np.float64), (K,))
+    sel_pf = np.zeros((K, N), bool)
+    sel_po = np.zeros((K, N), bool)
+    for k in range(K):
+        sel_pf[k], sel_po[k] = bilevel_select(
+            backward_scores[k], forward_scores[k], c_f, c_b,
+            cap_pf[k], cap_po[k], resolution)
+    return Schedule(merge_tables(sel_pf, sel_po), n_layers, n_groups)
+
+
+# ------------------------------------------------------------------- gates
+def gates_from_schedule(sched: Schedule, mb_of_sample: np.ndarray
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Materialize (g_f, g_b) of shape [n_layers, B, G] for the masked path.
+
+    mb_of_sample: [B] micro-batch index of each sample in the batch.
+    g_f = 1 where op in {p_f, p_o} (forward runs); g_b = 1 where op == p_f.
+    """
+    t = sched.layer_group_view()                         # [L, G, N]
+    per_sample = t[:, :, mb_of_sample]                   # [L, G, B]
+    g_f = jnp.asarray((per_sample != P_S).transpose(0, 2, 1), jnp.float32)
+    g_b = jnp.asarray((per_sample == P_F).transpose(0, 2, 1), jnp.float32)
+    return g_f, g_b
+
+
+def packed_indices(sched: Schedule, mb_of_sample: np.ndarray,
+                   pad_to: Optional[int] = None
+                   ) -> Tuple[np.ndarray, np.ndarray, int, int]:
+    """Gather indices for the packed path.
+
+    Returns (idx [L, G, C], bwd_mask [L, G, C], C_f, C) where idx[l,g] lists
+    the samples each subnet processes forward (p_f first, then p_o) and
+    bwd_mask is 1 for the p_f entries. Requires the schedule to be balanced
+    (equal counts per subnet) — which the knapsack guarantees when scores
+    are positive; otherwise pad_to sets the capacity and entries are
+    repeated (repeats are masked out via a zero in bwd/fwd scale... padding
+    repeats the first selected sample and contributes via scatter with a
+    zero weight handled by the caller).
+    """
+    t = sched.layer_group_view()                         # [L, G, N]
+    L, G, N = t.shape
+    per_sample = t[:, :, mb_of_sample]                   # [L, G, B]
+    B = per_sample.shape[-1]
+    counts_f = (per_sample == P_F).sum(-1)
+    counts_o = (per_sample == P_O).sum(-1)
+    C_f = int(counts_f.max())
+    C_o = int(counts_o.max())
+    C = pad_to or (C_f + C_o)
+    idx = np.zeros((L, G, C), np.int32)
+    bwd = np.zeros((L, G, C), np.float32)
+    val = np.zeros((L, G, C), np.float32)
+    for l in range(L):
+        for g in range(G):
+            f = np.nonzero(per_sample[l, g] == P_F)[0]
+            o = np.nonzero(per_sample[l, g] == P_O)[0]
+            take = np.concatenate([f, o])[:C]
+            idx[l, g, :len(take)] = take
+            bwd[l, g, :len(f)] = 1.0
+            val[l, g, :len(take)] = 1.0
+    return idx, bwd, val, C_f
+
+
+def op_counts(sched: Schedule) -> dict:
+    t = sched.table
+    return {"p_f": int((t == P_F).sum()), "p_o": int((t == P_O).sum()),
+            "p_s": int((t == P_S).sum())}

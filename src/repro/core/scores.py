@@ -1,0 +1,152 @@
+"""Contribution scores for D2FT subnets (paper §II-A3, Table III).
+
+Metrics: Fisher Information  Σ‖∇w‖² (per micro-batch), Weight Magnitude
+Σ‖w‖ (sample-independent), Gradient Magnitude Σ‖∇w‖, Taylor importance
+Σ‖w ⊙ ∇w‖. The paper's final choice: backward = Weight Magnitude,
+forward = Fisher Information.
+
+A *subnet* is (layer l, head-group g): the g-th slice of every width-
+partitionable weight in block l. Slicing rules are name-based; weights with
+no natural width partition (router, norms, conv, scalar SSM params) are
+counted fully in every group (they are replicated across subnets in the
+paper's deployment too — e.g. frozen norms are "replicated for every
+subnet", §III-A).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+# name -> ("col" slice last dim | "row" slice first dim | "rep" replicate)
+_SLICE_RULES: Dict[str, str] = {
+    "wq": "col", "wk": "col", "wv": "col", "wo": "row",
+    "bq": "col", "bk": "col", "bv": "col",
+    "w_up": "col", "w_gate": "col", "w_down": "row",
+    # SSD
+    "w_in": "col", "w_out": "row", "A_log": "col", "dt_bias": "col",
+    "D": "col", "norm_scale": "col", "conv_w": "col", "conv_b": "col",
+    # RG-LRU
+    "w_gate_branch": "col", "w_rec_branch": "col", "w_a": "col",
+    "w_x": "col", "b_a": "col", "b_x": "col", "Lambda": "col",
+}
+
+
+def _slice_reduce(name: str, arr, G: int, leaf_fn) -> jnp.ndarray:
+    """Reduce one weight into per-group scalars [G]."""
+    rule = _SLICE_RULES.get(name, "rep")
+    a = arr
+    if rule == "col" and a.shape[-1] % G == 0:
+        parts = a.reshape(*a.shape[:-1], G, a.shape[-1] // G)
+        axes = tuple(i for i in range(parts.ndim) if i != parts.ndim - 2)
+        return leaf_fn(parts, axes)
+    if rule == "row" and a.shape[0] % G == 0:
+        parts = a.reshape(G, a.shape[0] // G, *a.shape[1:])
+        axes = tuple(range(1, parts.ndim))
+        return leaf_fn(parts, axes)
+    full = leaf_fn(a[None], tuple(range(1, a.ndim + 1)))
+    return jnp.broadcast_to(full, (G,))
+
+
+def _walk(block: dict, prefix=""):
+    for k, v in block.items():
+        if isinstance(v, dict):
+            yield from _walk(v, k)
+        else:
+            yield k, v
+
+
+def subnet_reduce(block: dict, G: int, leaf_fn) -> jnp.ndarray:
+    """Reduce a block's params (or grads) into per-group scores [G]."""
+    total = jnp.zeros((G,), jnp.float32)
+    for name, arr in _walk(block):
+        total = total + _slice_reduce(name, arr.astype(jnp.float32), G, leaf_fn)
+    return total
+
+
+def _sum_abs(parts, axes):
+    return jnp.sum(jnp.abs(parts), axis=axes)
+
+
+def _sum_sq(parts, axes):
+    return jnp.sum(parts * parts, axis=axes)
+
+
+# ------------------------------------------------------------------ metrics
+def weight_magnitude(blocks: Sequence[dict], G: int) -> np.ndarray:
+    """[L, G] — Σ‖w‖ per subnet."""
+    return np.stack([np.asarray(subnet_reduce(b, G, _sum_abs)) for b in blocks])
+
+
+def grad_metric(grad_blocks: Sequence[dict], blocks: Sequence[dict], G: int,
+                metric: str) -> np.ndarray:
+    """[L, G] for one micro-batch's gradients."""
+    out = []
+    for gb, wb in zip(grad_blocks, blocks):
+        if metric == "fisher":
+            out.append(subnet_reduce(gb, G, _sum_sq))
+        elif metric == "gradient_magnitude":
+            out.append(subnet_reduce(gb, G, _sum_abs))
+        elif metric == "taylor":
+            prod = jax.tree.map(lambda g, w: g * w, gb, wb)
+            out.append(subnet_reduce(prod, G, _sum_abs))
+        else:
+            raise ValueError(metric)
+    return np.stack([np.asarray(o) for o in out])
+
+
+def compute_scores(loss_fn: Callable, params, blocks_getter: Callable,
+                   microbatches: Sequence, G: int,
+                   backward_metric: str = "weight_magnitude",
+                   forward_metric: str = "fisher"):
+    """Score every (subnet, micro-batch) pair before fine-tuning.
+
+    loss_fn(params, microbatch) -> scalar; blocks_getter(tree) -> list of
+    per-layer block dicts (works on params and on grads, which share
+    structure). Returns (backward [K, N], forward [K, N]) with K = L*G.
+
+    Per the paper: all samples are fed forward+backward once *without
+    updating weights* to collect gradient statistics.
+    """
+    blocks = blocks_getter(params)
+    L = len(blocks)
+    N = len(microbatches)
+    need_grads = ("fisher" in (backward_metric, forward_metric)
+                  or "gradient_magnitude" in (backward_metric, forward_metric)
+                  or "taylor" in (backward_metric, forward_metric))
+    grad_fn = jax.jit(jax.grad(loss_fn)) if need_grads else None
+
+    def metric_per_mb(metric):
+        if metric == "weight_magnitude":
+            wm = weight_magnitude(blocks, G)                    # [L, G]
+            return np.repeat(wm.reshape(L * G, 1), N, axis=1)
+        vals = np.zeros((L * G, N))
+        for i, mb in enumerate(microbatches):
+            grads = grad_fn(params, mb)
+            gm = grad_metric(blocks_getter(grads), blocks, G, metric)
+            vals[:, i] = gm.reshape(L * G)
+        return vals
+
+    return metric_per_mb(backward_metric), metric_per_mb(forward_metric)
+
+
+# ------------------------------------------------------- block extractors
+def transformer_blocks(params, cfg) -> List[dict]:
+    """Unstack scan-cycled transformer params into a per-layer block list."""
+    from repro.models.transformer import layer_groups
+    n_cycles, pat, rem = layer_groups(cfg)
+    blocks: List[dict] = []
+    if n_cycles > 0:
+        for c in range(n_cycles):
+            for pi in range(len(pat)):
+                blocks.append(jax.tree.map(lambda a: a[c],
+                                           params["cycles"][pi]))
+    blocks.extend(params["rest"])
+    return blocks
+
+
+def vit_blocks(params, cfg=None) -> List[dict]:
+    return list(params["blocks"])

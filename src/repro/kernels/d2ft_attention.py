@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: D2FT-gated flash attention.
+
+The paper skips a subnet's forward entirely for shortcut (p_s) micro-batches
+— on a GPU cluster the subnet's device simply idles. The TPU analogue is a
+flash-attention kernel with a per-(sample, head) gate operand: when
+``gate == 0`` the whole online-softmax KV loop for that (batch, head) grid
+slice is skipped with ``@pl.when`` and zeros are written once, so the MXU
+never sees the block. Supports causal and sliding-window masks (the
+assigned archs' local-attention layers).
+
+Tiling: q tiles [block_q, head_dim], kv tiles [block_k, head_dim] — both
+MXU-aligned (multiples of 128 for fp32/bf16 lanes); the fp32 accumulator
+(block_q × head_dim) plus m/l statistics live in VMEM scratch. The KV axis
+is the innermost (sequential) grid dim, so the scratch carries across kv
+steps; fully-masked causal blocks are skipped with @pl.when as well.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _kernel(gate_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int, block_q: int,
+            block_k: int, n_k: int, seq_len: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    gate = gate_ref[0, 0]
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # block-level skip: gate==0 (p_s subnet) or fully-masked causal block
+    qpos0 = iq * block_q
+    kpos0 = ik * block_k
+    block_live = jnp.bool_(True)
+    if causal:
+        block_live &= kpos0 <= qpos0 + block_q - 1
+    if window and window > 0:
+        block_live &= kpos0 + block_k - 1 > qpos0 - window
+    run = jnp.logical_and(gate != 0, block_live)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q * scale, k,
+                                (((1,), (1,)), ((), ())))   # [bq, bk]
+        qpos = qpos0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = kpos0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < seq_len
+        if causal:
+            mask &= kpos <= qpos
+        if window and window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.where(l > 0, l, 1.0)
+        out = acc_ref[...] / safe[:, None]
+        out = jnp.where((l > 0)[:, None], out, 0.0)
+        out = out * gate.astype(jnp.float32)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def d2ft_flash_attention(q, k, v, gates, *, causal: bool = True,
+                         window: int = 0, block_q: int = 128,
+                         block_k: int = 128, interpret: bool = False):
+    """q, k, v: [B, H, S, hd] (kv heads already expanded to H);
+    gates: [B, H] float {0,1}. Returns [B, H, S, hd]."""
+    B, H, S, hd = q.shape
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    n_q = S // block_q
+    n_k = S // block_k
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, n_k=n_k, seq_len=S)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, iq, ik: (b, h)),          # gates
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, iq, ik: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),   # acc
+            pltpu.VMEM((block_q,), jnp.float32),      # m
+            pltpu.VMEM((block_q,), jnp.float32),      # l
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(gates, q, k, v)

@@ -1,0 +1,45 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute with interpret=True; on TPU the
+same pallas_call lowers to Mosaic. ``interpret=None`` auto-detects.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.d2ft_attention import d2ft_flash_attention
+from repro.kernels.lora_matmul import lora_matmul
+from repro.kernels import ref
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def gated_attention(q, k, v, gates, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None):
+    """D2FT-gated flash attention. q,k,v: [B, H, S, hd]; gates: [B, H]."""
+    return d2ft_flash_attention(
+        q, k, v, gates, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_m", "block_n",
+                                             "interpret"))
+def lora_linear(x, w, a, b, scale: float = 1.0, *, block_m: int = 256,
+                block_n: int = 256, interpret: Optional[bool] = None):
+    """Fused y = x·W + scale·(x·A)·B for 2-D or 3-D x."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    y = lora_matmul(x2, w, a, b, scale, block_m=block_m, block_n=block_n,
+                    interpret=_auto_interpret(interpret))
+    return y.reshape(*shape[:-1], w.shape[-1])

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def d2ft_attention_ref(q, k, v, gates, *, causal: bool = True,
+                       window: int = 0):
+    """Gated attention oracle.
+
+    q, k, v: [B, H, S, hd]; gates: [B, H] in {0, 1} — 0 means the
+    (micro-batch sample, head) subnet is shortcut (p_s): output is zeros.
+    """
+    B, H, S, hd = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window and window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    out = out * gates[:, :, None, None].astype(jnp.float32)
+    return out.astype(q.dtype)
+
+
+def lora_matmul_ref(x, w, a, b, scale: float):
+    """y = x @ w + scale * (x @ a) @ b.   x: [M, K]; w: [K, N];
+    a: [K, r]; b: [r, N]."""
+    base = x @ w
+    delta = (x @ a) @ b
+    return base + scale * delta.astype(base.dtype)

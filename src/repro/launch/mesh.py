@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Target: TPU v5e, 256 chips per pod. Single pod = (data=16, model=16);
+two pods = (pod=2, data=16, model=16) with the ``pod`` axis carrying
+data parallelism across the DCN/ICI boundary (gradient all-reduce only).
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (required: smoke tests must see 1 CPU device; only dryrun.py sets
+XLA_FLAGS for 512 host devices before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over however many local devices exist (tests/examples)."""
+    n = len(jax.devices())
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+# TPU v5e hardware constants used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

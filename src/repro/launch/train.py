@@ -1,0 +1,91 @@
+"""Production train launcher.
+
+On a real TPU pod each host runs (with jax.distributed auto-init):
+
+  python -m repro.launch.train --arch gemma3-1b --shape train_4k \
+      --d2ft --n-pf 3 --n-po 1 --steps 500 --ckpt /tmp/ckpt
+
+On this CPU container it runs the same code path on a 1-device mesh with a
+reduced config unless --full is passed (the full configs only fit a pod).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES, get_config, get_smoke_config
+from repro.configs.base import D2FTConfig
+from repro.data.synthetic import lm_batches
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models.transformer import init_model
+from repro.optim.optimizers import adamw, sgd
+from repro.sharding.policy import ShardingPolicy
+from repro.train.checkpoints import save_checkpoint
+from repro.train.loop import finetune
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--optimizer", choices=("sgd", "adamw"), default="adamw")
+    ap.add_argument("--d2ft", action="store_true")
+    ap.add_argument("--packed", action="store_true",
+                    help="use the packed D2FT execution path")
+    ap.add_argument("--n-pf", type=int, default=3)
+    ap.add_argument("--n-po", type=int, default=1)
+    ap.add_argument("--n-microbatches", type=int, default=4)
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config on the production mesh "
+                         "(requires a pod)")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    if args.full:
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh()
+    else:
+        cfg = get_smoke_config(args.arch)
+        mesh = make_host_mesh()
+    print(f"arch={cfg.name} layers={cfg.n_layers} d_model={cfg.d_model} "
+          f"mesh={dict(mesh.shape)}")
+
+    if cfg.frontend != "none":
+        raise SystemExit("text-training launcher; audio/vlm archs use the "
+                         "example drivers (examples/)")
+
+    d2 = None
+    if args.d2ft:
+        d2 = D2FTConfig(n_microbatches=args.n_microbatches, n_pf=args.n_pf,
+                        n_po=args.n_po,
+                        head_groups=max(cfg.n_heads, 1))
+        print(f"D2FT: {args.n_pf} p_f + {args.n_po} p_o of "
+              f"{args.n_microbatches} micro-batches "
+              f"(compute {100 * (args.n_pf + 0.4 * args.n_po) / args.n_microbatches:.0f}%)")
+
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    opt = adamw(args.lr) if args.optimizer == "adamw" else sgd(args.lr)
+    batches = lm_batches(0, cfg.vocab_size, args.batch, args.seq,
+                         args.steps)
+    t0 = time.time()
+    params, opt_state, log = finetune(params, cfg, d2, opt, batches,
+                                      steps=args.steps, packed=args.packed)
+    dt = time.time() - t0
+    print(f"{args.steps} steps in {dt:.1f}s — loss "
+          f"{log.losses[0]:.3f} -> {log.losses[-1]:.3f}")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, {"params": params})
+        print(f"saved {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

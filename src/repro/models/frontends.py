@@ -1,0 +1,41 @@
+"""Modality frontends for [audio] and [vlm] architectures.
+
+Per the assignment carve-out these are STUBS: the conv feature extractor
+(HuBERT) and the CLIP/SigLIP vision tower (Phi-3-vision) are not
+implemented. ``input_specs``-compatible helpers below produce precomputed
+frame/patch embeddings of the right shape; a learned linear projector inside
+the backbone (params["frontend_proj"]) maps them to d_model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def feature_spec(cfg: ModelConfig, batch: int, seq_len: int):
+    """ShapeDtypeStruct stand-in for the frontend's output embeddings."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    if cfg.frontend == "audio_stub":
+        # encoder consumes one embedding per frame: the whole sequence
+        return jax.ShapeDtypeStruct((batch, seq_len, cfg.frontend_dim), dt)
+    if cfg.frontend == "vision_stub":
+        return jax.ShapeDtypeStruct((batch, cfg.frontend_tokens, cfg.frontend_dim), dt)
+    return None
+
+
+def synth_features(key, cfg: ModelConfig, batch: int, seq_len: int):
+    spec = feature_spec(cfg, batch, seq_len)
+    if spec is None:
+        return None
+    return jax.random.normal(key, spec.shape, spec.dtype)
+
+
+def text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Text tokens so that frontend tokens + text == seq_len."""
+    if cfg.frontend == "vision_stub":
+        return seq_len - cfg.frontend_tokens
+    if cfg.frontend == "audio_stub":
+        return 0
+    return seq_len

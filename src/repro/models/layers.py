@@ -1,0 +1,109 @@
+"""Basic pure-JAX layers: norms, embeddings, RoPE, MLPs.
+
+Convention: every layer is a pair of functions
+  ``init_<layer>(key, ...) -> params``  (params = pytree of jnp arrays)
+  ``<layer>(params, x, ...) -> y``      (pure, jit-able)
+No framework dependency; shapes follow [batch, seq, d_model].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------- init utils
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------- norms
+def init_norm(kind: str, dim: int, dtype):
+    if kind == "rms":
+        return {"scale": jnp.ones((dim,), dtype)}
+    elif kind == "layer":
+        return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+    raise ValueError(kind)
+
+
+def apply_norm(params, x, kind: str = "rms", eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    elif kind == "layer":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+        return y.astype(x.dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    head_dim = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(head_dim, theta), jnp.float32)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    angles = angles[..., None, :]                                 # broadcast heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- MLP
+def init_mlp(key, d_model: int, d_ff: int, gated: bool, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_up": dense_init(k1, d_model, d_ff, dtype),
+         "w_down": dense_init(k2, d_ff, d_model, dtype)}
+    if gated:
+        p["w_gate"] = dense_init(k3, d_model, d_ff, dtype)
+    return p
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def apply_mlp(params, x, act: str = "silu", gated: bool = True):
+    h = x @ params["w_up"]
+    if gated:
+        h = _act(act)(x @ params["w_gate"]) * h
+    else:
+        h = _act(act)(h)
+    return h @ params["w_down"]
+
+
+# ----------------------------------------------------------------- embedding
+def init_embedding(key, vocab: int, d_model: int, dtype):
+    return {"table": embed_init(key, vocab, d_model, dtype)}
+
+
+def apply_embedding(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def apply_unembedding(params, x):
+    return x @ params["table"].T
+
+
+def softcap(logits, cap: float):
+    if cap and cap > 0:
+        return jnp.tanh(logits / cap) * cap
+    return logits

@@ -1,0 +1,115 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t)                 (recurrence gate)
+    i_t = sigmoid(W_x x_t)                 (input gate)
+    log a_t = -c * softplus(Lambda) * r_t  (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses jax.lax.associative_scan on the affine recurrence;
+decode is the single-step update. The full recurrent block is:
+    x -> [gate branch: linear+gelu] * [linear -> conv1d -> RG-LRU] -> out proj
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RGLRUConfig
+from repro.models.layers import dense_init
+
+_C = 8.0
+
+
+def init_rglru(key, d_model: int, cfg: RGLRUConfig, dtype):
+    width = cfg.lru_width or d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gate_branch": dense_init(ks[0], d_model, width, dtype),
+        "w_rec_branch": dense_init(ks[1], d_model, width, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, width)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((width,), dtype),
+        "w_a": dense_init(ks[3], width, width, dtype, scale=0.02),
+        "b_a": jnp.zeros((width,), dtype),
+        "w_x": dense_init(ks[4], width, width, dtype, scale=0.02),
+        "b_x": jnp.zeros((width,), dtype),
+        # Lambda init so that a^c in [0.9, 0.999] at r=1 (Griffin appendix)
+        "Lambda": jnp.asarray(
+            jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, width)) / _C)),
+            dtype),
+        "w_out": dense_init(ks[5], width, d_model, dtype),
+    }
+
+
+def _rglru_gates(params, x):
+    """x: [..., width] (post-conv). Returns (log_a, gated_input)."""
+    r = jax.nn.sigmoid(x @ params["w_a"] + params["b_a"])
+    i = jax.nn.sigmoid(x @ params["w_x"] + params["b_x"])
+    log_a = -_C * jax.nn.softplus(params["Lambda"].astype(jnp.float32)) * \
+        r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    b = beta * (i * x).astype(jnp.float32)
+    return a, b
+
+
+def _assoc_scan(a, b, h0=None):
+    """Affine scan h_t = a_t h_{t-1} + b_t over axis=1. a,b: [B,S,W]."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def _causal_conv(x, conv_w, conv_b, prev=None):
+    W = conv_w.shape[0]
+    if prev is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = prev
+    xp = jnp.concatenate([pad, x], axis=1)
+    return sum(xp[:, i:i + x.shape[1]] * conv_w[i] for i in range(W)) + conv_b
+
+
+def apply_rglru(params, x, cfg: RGLRUConfig,
+                head_scale: Optional[jnp.ndarray] = None):
+    """Training/prefill forward. x: [B,S,d_model] -> [B,S,d_model]."""
+    gate = jax.nn.gelu(x @ params["w_gate_branch"])
+    u = x @ params["w_rec_branch"]
+    u = _causal_conv(u, params["conv_w"], params["conv_b"])
+    a, b = _rglru_gates(params, u)
+    h = _assoc_scan(a, b).astype(x.dtype)
+    if head_scale is not None:
+        H = head_scale.shape[-1]
+        W = h.shape[-1]
+        hs = jnp.repeat(head_scale, W // H, axis=-1)    # block-diagonal groups
+        h = h * hs[:, None, :].astype(h.dtype)
+    y = h * gate
+    return y @ params["w_out"]
+
+
+def init_rglru_cache(batch: int, d_model: int, cfg: RGLRUConfig, dtype):
+    width = cfg.lru_width or d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, width), dtype),
+        "h": jnp.zeros((batch, width), jnp.float32),
+    }
+
+
+def decode_rglru(params, cache, x, cfg: RGLRUConfig):
+    """One-token decode. x: [B,1,d_model]."""
+    gate = jax.nn.gelu(x @ params["w_gate_branch"])
+    u = x @ params["w_rec_branch"]
+    conv_in = jnp.concatenate([cache["conv"], u], axis=1)
+    W = params["conv_w"].shape[0]
+    u1 = sum(conv_in[:, i] * params["conv_w"][i] for i in range(W)) + params["conv_b"]
+    a, b = _rglru_gates(params, u1)                     # [B,W]
+    h = a * cache["h"] + b
+    y = (h.astype(x.dtype)[:, None] * gate)
+    return y @ params["w_out"], {"conv": conv_in[:, 1:], "h": h}

@@ -1,0 +1,494 @@
+"""Composable transformer backbone: ModelConfig -> init / forward / decode.
+
+Design notes
+------------
+* Layers are grouped into *pattern cycles* (cfg.block_pattern) and executed
+  with jax.lax.scan over stacked per-cycle params, keeping HLO size O(1) in
+  depth (64-layer configs compile as a 1-cycle body). Remainder layers (when
+  n_layers % len(pattern) != 0) run unstacked after the scan.
+* D2FT gating: ``gates = (g_f, g_b)`` with shape [n_layers, B, G] each.
+  Per block, the residual contribution is decomposed into G head/width
+  groups c_g and mixed as
+      c_eff = g_f * (g_b * c_g + (1 - g_b) * stop_gradient(c_g)),
+  which implements p_f (1,1), p_o (1,0), p_s (0,·) exactly: p_o keeps the
+  forward value but kills every gradient (params *and* activations) through
+  the subnet for that sample; p_s removes the contribution so only the
+  residual route remains. This is the masked reference path; the packed
+  deployment path lives in core/d2ft.py.
+* MoE blocks treat the routed FFN as a single D2FT group (G position 0).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, RGLRU, SSD,
+                                ModelConfig)
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_norm, dense_init, init_embedding,
+                                 init_mlp, init_norm, softcap, _act)
+
+
+# ============================================================ gating helpers
+def gate_mix(c_g, g_f, g_b):
+    """c_g: [B,S,G,D]; g_f,g_b: [B,G] in {0,1}. See module docstring."""
+    gf = g_f[:, None, :, None].astype(c_g.dtype)
+    gb = g_b[:, None, :, None].astype(c_g.dtype)
+    return gf * (gb * c_g + (1.0 - gb) * jax.lax.stop_gradient(c_g))
+
+
+def _group_project(heads_out, wo, G):
+    """heads_out: [B,S,H,hd]; wo: [H*hd, D]. Returns per-group projected
+    contributions [B,S,G,D] (sum over G == plain projection)."""
+    B, S, H, hd = heads_out.shape
+    D = wo.shape[-1]
+    w3 = wo.reshape(H, hd, D)
+    per_head = jnp.einsum("bshd,hdD->bshD", heads_out, w3)
+    return per_head.reshape(B, S, G, H // G, D).sum(axis=3)
+
+
+# ============================================================== block params
+def _init_block(key, kind: str, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    p = {"norm1": init_norm(cfg.norm, cfg.d_model, dtype)}
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        p["attn"] = attn.init_attention(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.resolved_head_dim, cfg.qkv_bias, dtype)
+    elif kind == SSD:
+        p["ssd"] = ssm_mod.init_ssd(ks[0], cfg.d_model, cfg.ssm, dtype)
+    elif kind == RGLRU:
+        p["rglru"] = rglru_mod.init_rglru(ks[0], cfg.d_model, cfg.rglru, dtype)
+    else:
+        raise ValueError(kind)
+    has_ffn = (cfg.moe is not None) or cfg.d_ff > 0
+    if kind == SSD:
+        has_ffn = cfg.d_ff > 0       # mamba2: no FFN
+    if has_ffn:
+        p["norm2"] = init_norm(cfg.norm, cfg.d_model, dtype)
+        if cfg.moe is not None and kind != SSD:
+            p["moe"] = moe_mod.init_moe(ks[1], cfg.d_model, cfg.moe, dtype)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_gated, dtype)
+    return p
+
+
+def _split_gates(gates, idx):
+    if gates is None:
+        return None
+    g_f, g_b = gates
+    return g_f[idx], g_b[idx]
+
+
+# ============================================================= block forward
+def _apply_attn_inner(p, h, kind, cfg: ModelConfig, layer_gates, policy):
+    """Attention contribution (pre-residual), with per-head-group gating."""
+    window = cfg.window if kind == ATTN_LOCAL else 0
+    hd = cfg.resolved_head_dim
+    B, S, _ = h.shape
+    n_heads, n_kv = cfg.n_heads, cfg.n_kv_heads
+    if policy is not None and layer_gates is None:
+        padding = policy.head_padding()
+        if padding is not None:
+            n_heads, n_kv = padding
+            p = dict(p, **attn.pad_attention_params(
+                p, cfg.n_heads, cfg.n_kv_heads, hd, n_heads, n_kv))
+    q, k, v = attn._project_qkv(p, h, n_heads, n_kv, hd)
+    if cfg.rope:
+        pos = jnp.arange(S)[None, :]
+        q = attn.apply_rope(q, pos, cfg.rope_theta)
+        k = attn.apply_rope(k, pos, cfg.rope_theta)
+    if policy is not None:
+        q, k, v = policy.heads(q), policy.kv(k), policy.kv(v)
+    chunk = policy.attn_q_chunk if policy is not None else 0
+    if window and window > 0 and S > 2 * window and S % window == 0:
+        out = attn._block_local_attention(q, k, v, window)
+    elif chunk and chunk > 0 and S % chunk == 0 and S > chunk:
+        out = attn._chunked_sdpa(q, k, v, chunk, causal=cfg.causal,
+                                 window=window)
+    elif window and window > 0:
+        out = attn._sdpa(q, k, v, attn._window_mask(S, S, window))
+    elif cfg.causal:
+        out = attn._sdpa(q, k, v, attn._causal_mask(S, S))
+    else:
+        out = attn._sdpa(q, k, v, jnp.ones((1, 1, S, S), bool))
+    if layer_gates is None:
+        return out.reshape(B, S, n_heads * hd) @ p["wo"]
+    g_f, g_b = layer_gates
+    G = g_f.shape[-1]
+    c_g = _group_project(out, p["wo"], G)               # [B,S,G,D]
+    return gate_mix(c_g, g_f, g_b).sum(axis=2)
+
+
+def _apply_ffn(p, h, cfg: ModelConfig, layer_gates, policy):
+    if "moe" in p:
+        if policy is not None and policy.moe_sharded(cfg):
+            y, aux = moe_mod.apply_moe_ep(
+                p["moe"], h, cfg.moe, cfg.mlp_act, policy.mesh,
+                policy.batch_axes if
+                h.shape[0] % policy.data_size == 0 else None,
+                seq_sharded=h.shape[1] % policy.model_size == 0
+                and h.shape[1] > 1,
+                expert_parallel=policy.expert_parallel)
+        else:
+            y, aux = moe_mod.apply_moe(
+                p["moe"], h, cfg.moe, act=cfg.mlp_act,
+                shard_fn=policy.moe if policy is not None else None)
+        if layer_gates is not None:
+            g_f, g_b = layer_gates
+            y = gate_mix(y[:, :, None, :], g_f[:, :1], g_b[:, :1])[:, :, 0]
+        return y, aux
+    up = h @ p["mlp"]["w_up"]
+    if cfg.mlp_gated:
+        hid = _act(cfg.mlp_act)(h @ p["mlp"]["w_gate"]) * up
+    else:
+        hid = _act(cfg.mlp_act)(up)
+    if policy is not None:
+        hid = policy.ffn(hid)
+    if layer_gates is None:
+        return hid @ p["mlp"]["w_down"], None
+    g_f, g_b = layer_gates
+    G = g_f.shape[-1]
+    B, S, F = hid.shape
+    D = p["mlp"]["w_down"].shape[-1]
+    wd = p["mlp"]["w_down"].reshape(G, F // G, D)
+    c_g = jnp.einsum("bsgf,gfD->bsgD", hid.reshape(B, S, G, F // G), wd)
+    return gate_mix(c_g, g_f, g_b).sum(axis=2), None
+
+
+def _apply_ssd_inner(p, h, cfg: ModelConfig, layer_gates):
+    if layer_gates is None:
+        return ssm_mod.apply_ssd(p, h, cfg.d_model, cfg.ssm)
+    # gate per SSD head-group: run heads, mix via head_scale decomposition.
+    g_f, g_b = layer_gates
+    G = g_f.shape[-1]
+    d_inner, H, P, N = ssm_mod._dims(cfg.d_model, cfg.ssm)
+    # Per-group mixing needs the contribution split; cheapest correct form:
+    # run twice (full and stop-grad) and mix. Masked path is test-scale only.
+    full = ssm_mod.apply_ssd(p, h, cfg.d_model, cfg.ssm)
+    sg = jax.lax.stop_gradient(full)
+    gf = g_f[:, :1].mean(-1)[:, None, None]             # block granularity
+    gb = g_b[:, :1].mean(-1)[:, None, None]
+    return gf * (gb * full + (1 - gb) * sg)
+
+
+def _apply_rglru_inner(p, h, cfg: ModelConfig, layer_gates):
+    if layer_gates is None:
+        return rglru_mod.apply_rglru(p, h, cfg.rglru)
+    full = rglru_mod.apply_rglru(p, h, cfg.rglru)
+    sg = jax.lax.stop_gradient(full)
+    g_f, g_b = layer_gates
+    gf = g_f[:, :1].mean(-1)[:, None, None]
+    gb = g_b[:, :1].mean(-1)[:, None, None]
+    return gf * (gb * full + (1 - gb) * sg)
+
+
+def apply_block(p, x, kind: str, cfg: ModelConfig, layer_gates=None,
+                policy=None):
+    """Pre-norm residual block. Returns (x, aux_losses or None)."""
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        c = _apply_attn_inner(p["attn"], h, kind, cfg, layer_gates, policy)
+    elif kind == SSD:
+        c = _apply_ssd_inner(p["ssd"], h, cfg, layer_gates)
+    elif kind == RGLRU:
+        c = _apply_rglru_inner(p["rglru"], h, cfg, layer_gates)
+    if policy is not None:
+        # constrain the CONTRIBUTION before the residual add so GSPMD emits
+        # a reduce-scatter of the partial-sum projection instead of
+        # all-reduce + slice (Megatron sequence-parallel; §Perf iter q2)
+        c = policy.residual(c)
+    x = x + c
+    if policy is not None:
+        x = policy.residual(x)
+    aux = None
+    if "norm2" in p:
+        h2 = apply_norm(p["norm2"], x, cfg.norm)
+        y, aux = _apply_ffn(p, h2, cfg, layer_gates, policy)
+        if policy is not None:
+            y = policy.residual(y)
+        x = x + y
+        if policy is not None:
+            x = policy.residual(x)
+    return x, aux
+
+
+# ========================================================== layer grouping
+def layer_groups(cfg: ModelConfig) -> Tuple[int, Tuple[str, ...], Tuple[str, ...]]:
+    """Returns (n_cycles, pattern, remainder_kinds)."""
+    pat = cfg.block_pattern
+    n_cycles = cfg.n_layers // len(pat)
+    rem = cfg.layer_kinds[n_cycles * len(pat):]
+    return n_cycles, pat, rem
+
+
+# ================================================================ model init
+def init_model(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    n_cycles, pat, rem = layer_groups(cfg)
+    keys = jax.random.split(key, 4 + len(rem))
+    params = {"embed": init_embedding(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+              "final_norm": init_norm(cfg.norm, cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[1], cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.frontend != "none":
+        params["frontend_proj"] = dense_init(
+            keys[2], cfg.frontend_dim, cfg.d_model, dtype)
+
+    def init_cycle(ck):
+        cks = jax.random.split(ck, len(pat))
+        return [_init_block(cks[i], pat[i], cfg, dtype) for i in range(len(pat))]
+
+    if n_cycles > 0:
+        cycle_keys = jax.random.split(keys[3], n_cycles)
+        stacked = jax.vmap(init_cycle)(cycle_keys)   # leading dim n_cycles
+        params["cycles"] = stacked
+    params["rest"] = [
+        _init_block(keys[4 + i], rem[i], cfg, dtype) for i in range(len(rem))]
+    return params
+
+
+# ============================================================ model forward
+def forward(params, cfg: ModelConfig, tokens=None, features=None,
+            gates=None, policy=None, remat: bool = False):
+    """Returns (logits, aux) — logits [B, S, vocab].
+
+    tokens: [B, S_text] int32 (None for pure-audio encoders)
+    features: [B, T_f, frontend_dim] stub frontend embeddings (audio/vlm)
+    gates: optional (g_f, g_b) of shape [n_layers, B, G]
+    """
+    cdt = jnp.dtype(cfg.compute_dtype)
+    parts = []
+    if features is not None:
+        parts.append((features.astype(cdt) @ params["frontend_proj"].astype(cdt)))
+    if tokens is not None:
+        from repro.models.layers import apply_embedding
+        parts.append(apply_embedding(params["embed"], tokens).astype(cdt))
+    x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    if policy is not None:
+        x = policy.residual(x)
+
+    n_cycles, pat, rem = layer_groups(cfg)
+    P = len(pat)
+    aux_sum = jnp.zeros((), jnp.float32)
+
+    if gates is not None:
+        g_f, g_b = gates
+        g_f_c = g_f[:n_cycles * P].reshape(n_cycles, P, *g_f.shape[1:])
+        g_b_c = g_b[:n_cycles * P].reshape(n_cycles, P, *g_b.shape[1:])
+        g_rest = (g_f[n_cycles * P:], g_b[n_cycles * P:])
+    else:
+        g_f_c = g_b_c = g_rest = None
+
+    if n_cycles > 0:
+        def cycle_body(carry, xs):
+            x, aux = carry
+            if gates is not None:
+                blocks, gfc, gbc = xs
+            else:
+                (blocks,) = xs
+            for i in range(P):
+                lg = (gfc[i], gbc[i]) if gates is not None else None
+                x, a = apply_block(blocks[i], x, pat[i], cfg, lg, policy)
+                if a is not None:
+                    aux = aux + a["load_balance"] + a["router_z"]
+            return (x, aux), None
+
+        body = cycle_body
+        if remat:
+            body = jax.checkpoint(cycle_body, prevent_cse=False)
+        xs = (params["cycles"],) if gates is None else (
+            params["cycles"], g_f_c, g_b_c)
+        if n_cycles <= 2:
+            # Unrolled: XLA's cost_analysis counts a while body ONCE
+            # regardless of trip count, so the dry-run's depth-1/depth-2
+            # FLOP extrapolation needs shallow models fully inlined.
+            for c in range(n_cycles):
+                xs_c = jax.tree.map(lambda a: a[c], xs)
+                (x, aux_sum), _ = body((x, aux_sum), xs_c)
+        else:
+            (x, aux_sum), _ = jax.lax.scan(body, (x, aux_sum), xs)
+
+    for i, kind in enumerate(rem):
+        lg = None
+        if gates is not None:
+            lg = (g_rest[0][i], g_rest[1][i])
+        x, a = apply_block(params["rest"][i], x, kind, cfg, lg, policy)
+        if a is not None:
+            aux_sum = aux_sum + a["load_balance"] + a["router_z"]
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T.astype(cdt)
+    else:
+        logits = x @ params["unembed"].astype(cdt)
+    if policy is not None:
+        logits = policy.logits(logits)
+    logits = softcap(logits, cfg.logit_softcap)
+    return logits, {"aux_loss": aux_sum}
+
+
+# ================================================================== decoding
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Per-layer caches, stacked per cycle position (mirrors params)."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    n_cycles, pat, rem = layer_groups(cfg)
+
+    def one(kind):
+        if kind == ATTN_GLOBAL:
+            return attn.init_kv_cache(batch, max_len, cfg.n_kv_heads,
+                                      cfg.resolved_head_dim, 0, dtype)
+        if kind == ATTN_LOCAL:
+            return attn.init_kv_cache(batch, max_len, cfg.n_kv_heads,
+                                      cfg.resolved_head_dim, cfg.window, dtype)
+        if kind == SSD:
+            return ssm_mod.init_ssd_cache(batch, cfg.d_model, cfg.ssm, dtype)
+        if kind == RGLRU:
+            return rglru_mod.init_rglru_cache(batch, cfg.d_model, cfg.rglru, dtype)
+        raise ValueError(kind)
+
+    cache = {}
+    if n_cycles > 0:
+        cache["cycles"] = [
+            jax.tree.map(lambda a: jnp.broadcast_to(a, (n_cycles,) + a.shape),
+                         one(k)) for k in pat]
+    cache["rest"] = [one(k) for k in rem]
+    return cache
+
+
+def _decode_block(p, c, x, kind, cfg: ModelConfig, t):
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        hd = cfg.resolved_head_dim
+        window = cfg.window if kind == ATTN_LOCAL else 0
+        y, c = attn.decode_attention(
+            p["attn"], c, h, t=t, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=hd, window=window,
+            rope=cfg.rope, rope_theta=cfg.rope_theta)
+    elif kind == SSD:
+        y, c = ssm_mod.decode_ssd(p["ssd"], c, h, cfg.d_model, cfg.ssm)
+    elif kind == RGLRU:
+        y, c = rglru_mod.decode_rglru(p["rglru"], c, h, cfg.rglru)
+    x = x + y
+    if "norm2" in p:
+        h2 = apply_norm(p["norm2"], x, cfg.norm)
+        if "moe" in p:
+            y2, _ = moe_mod.apply_moe(p["moe"], h2, cfg.moe, act=cfg.mlp_act)
+        else:
+            from repro.models.layers import apply_mlp
+            y2 = apply_mlp(p["mlp"], h2, cfg.mlp_act, cfg.mlp_gated)
+        x = x + y2
+    return x, c
+
+
+def decode_step(params, cache, cfg: ModelConfig, token, t, policy=None):
+    """One decode step. token: [B,1] int32; t: scalar — tokens already cached.
+    Returns (logits [B,1,vocab], new_cache)."""
+    from repro.models.layers import apply_embedding
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = apply_embedding(params["embed"], token).astype(cdt)
+    n_cycles, pat, rem = layer_groups(cfg)
+    P = len(pat)
+
+    new_cache = {"rest": []}
+    if n_cycles > 0:
+        def cycle_body(x, xs):
+            blocks = xs[0]
+            caches = xs[1]
+            new_cs = []
+            for i in range(P):
+                x, nc = _decode_block(blocks[i], caches[i], x, pat[i], cfg, t)
+                new_cs.append(nc)
+            return x, new_cs
+
+        if n_cycles <= 2:
+            # unrolled for dry-run cost extrapolation (see forward())
+            emitted = []
+            for c in range(n_cycles):
+                xs_c = jax.tree.map(lambda a: a[c],
+                                    (params["cycles"], cache["cycles"]))
+                x, nc = cycle_body(x, xs_c)
+                emitted.append(nc)
+            new_cache["cycles"] = jax.tree.map(
+                lambda *leaves: jnp.stack(leaves), *emitted)
+        else:
+            x, new_cycle_cache = jax.lax.scan(
+                cycle_body, x, (params["cycles"], cache["cycles"]))
+            new_cache["cycles"] = new_cycle_cache
+    for i, kind in enumerate(rem):
+        x, nc = _decode_block(params["rest"][i], cache["rest"][i], x, kind,
+                              cfg, t)
+        new_cache["rest"].append(nc)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T.astype(cdt)
+    else:
+        logits = x @ params["unembed"].astype(cdt)
+    if policy is not None:
+        logits = policy.logits(logits)
+    return softcap(logits, cfg.logit_softcap), new_cache
+
+
+# ============================================================== loss helpers
+@jax.custom_vjp
+def fused_xent(logits, labels):
+    """Mean token cross-entropy with a hand-written backward.
+
+    Forward never materializes a float32 [B,S,V] buffer (label logit is
+    gathered first; logsumexp reduces with fused elementwise ops) and the
+    backward emits the cotangent (softmax - onehot) directly in the logits
+    dtype — the naive log_softmax formulation kept several f32 logits-sized
+    temps alive, dominating HBM in the dry-run (EXPERIMENTS.md §Perf).
+    """
+    loss, _ = _xent_fwd_impl(logits, labels)
+    return loss
+
+
+def _xent_fwd_impl(logits, labels):
+    label_logit = jnp.take_along_axis(logits, labels[..., None],
+                                      axis=-1)[..., 0].astype(jnp.float32)
+    m = jnp.max(logits, axis=-1)
+    # exp stays in the logits dtype; the reduce accumulates in f32 (no f32
+    # [B,S,V] materialization even on backends with weak fusion)
+    lse = m.astype(jnp.float32) + jnp.log(jnp.sum(
+        jnp.exp(logits - m[..., None]), axis=-1, dtype=jnp.float32))
+    loss = jnp.mean(lse - label_logit)
+    return loss, (logits, labels, m, lse)
+
+
+def _xent_bwd_impl(res, g):
+    logits, labels, m, lse = res
+    n = logits.size // logits.shape[-1]
+    # softmax in the logits dtype; exp fuses with the subtraction
+    z = (lse - m.astype(jnp.float32)).astype(logits.dtype)
+    gn = (g / n).astype(logits.dtype)
+    dlogits = jnp.exp(logits - m[..., None] - z[..., None]) * gn
+    # subtract g/n at the label position by scatter — avoids materializing a
+    # [B, S, V] onehot buffer
+    b_idx = jnp.arange(dlogits.shape[0])[:, None]
+    s_idx = jnp.arange(dlogits.shape[1])[None, :]
+    dlogits = dlogits.at[b_idx, s_idx, labels].add(-gn)
+    return dlogits, None
+
+
+fused_xent.defvjp(lambda logits, labels: _xent_fwd_impl(logits, labels),
+                  _xent_bwd_impl)
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, labels, features=None,
+            gates=None, policy=None, remat: bool = False):
+    """Next-token (or frame-classification) cross-entropy."""
+    logits, aux = forward(params, cfg, tokens=tokens, features=features,
+                          gates=gates, policy=policy, remat=remat)
+    if features is not None and tokens is not None:
+        # VLM: loss only over the text region (labels align to text tokens)
+        logits = logits[:, -labels.shape[1]:]
+    loss = fused_xent(logits, labels)
+    return loss + aux["aux_loss"], {"ce": loss, "aux": aux["aux_loss"]}

@@ -1,0 +1,70 @@
+"""Minimal pure-JAX optimizer library (no optax dependency).
+
+The paper fine-tunes with SGD + momentum (§IV-A); AdamW is provided for the
+LLM fine-tuning paths. Optimizer states are pytrees shaped like params, so
+they shard under the same ZeRO-style policy as the weights.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+
+
+def sgd(lr: float, momentum: float = 0.9, weight_decay: float = 0.0,
+        nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(jnp.zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: momentum * m + g, mu, grads)
+        else:
+            upd = mu
+        new_params = jax.tree.map(lambda p, u: p - lr * u, params, upd)
+        return new_params, {"mu": mu, "step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params),
+                "v": jax.tree.map(jnp.zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            mh = m_ / bc1
+            vh = v_ / bc2
+            return p - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm

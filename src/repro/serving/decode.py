@@ -1,0 +1,50 @@
+"""Serving: batched prefill + decode against the transformer KV caches.
+
+``serve_step`` is the unit the decode dry-run shapes lower: ONE new token
+per sequence against a cache of ``seq_len`` tokens. ``generate`` drives a
+full prefill + N-token decode for the examples.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import decode_step, forward, init_cache
+
+
+def serve_step(params, cache, cfg: ModelConfig, token, t, policy=None):
+    """One decode step: token [B,1] int32, t scalar = tokens already cached.
+    Returns (next_token [B,1], logits [B,1,V], new_cache)."""
+    logits, cache = decode_step(params, cache, cfg, token, t, policy=policy)
+    next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    return next_tok, logits, cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len: int):
+    """Sequential prefill through the decode path (cache-exact; fine for
+    example-scale runs — production prefill uses forward() + cache dump)."""
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, max_len)
+    step = jax.jit(lambda c, tok, t: decode_step(params, c, cfg, tok, t))
+    logits = None
+    for i in range(S):
+        logits, cache = step(cache, tokens[:, i:i + 1], jnp.int32(i))
+    return logits, cache
+
+
+def generate(params, cfg: ModelConfig, prompt, n_tokens: int,
+             max_len: Optional[int] = None):
+    """Greedy generation. prompt: [B, S] int32. Returns [B, S + n_tokens]."""
+    B, S = prompt.shape
+    max_len = max_len or (S + n_tokens)
+    logits, cache = prefill(params, cfg, prompt, max_len)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    out = [prompt, tok]
+    step = jax.jit(lambda c, tk, t: serve_step(params, c, cfg, tk, t))
+    for i in range(n_tokens - 1):
+        tok, _, cache = step(cache, tok, jnp.int32(S + i))
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

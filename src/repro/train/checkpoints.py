@@ -1,0 +1,58 @@
+"""Checkpointing: save/restore param + optimizer pytrees (npz, no orbax).
+
+Trees are flattened to path-keyed arrays; structure is rebuilt on load from
+the same tree-def derived paths, so any pytree of jnp/np arrays round-trips.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]):
+    root: Any = {}
+    for path, arr in flat.items():
+        keys = path.split("/")
+        node = root
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        node[keys[-1]] = arr
+
+    def rebuild(node):
+        if not isinstance(node, dict):
+            return jnp.asarray(node)
+        if node and all(k.startswith("#") for k in node):
+            items = sorted(node.items(), key=lambda kv: int(kv[0][1:]))
+            return [rebuild(v) for _, v in items]
+        return {k: rebuild(v) for k, v in node.items()}
+
+    return rebuild(root)
+
+
+def save_checkpoint(path: str, state) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flatten(state))
+
+
+def load_checkpoint(path: str):
+    with np.load(path if path.endswith(".npz") else path + ".npz") as z:
+        flat = {k: z[k] for k in z.files}
+    return _unflatten(flat)

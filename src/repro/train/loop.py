@@ -1,0 +1,180 @@
+"""Training loops: standard fine-tuning and the D2FT-orchestrated variants.
+
+`finetune` drives either path on LLM backbones; `finetune_vit` mirrors the
+paper's ViT experiments and is what the paper-table benchmarks call.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import D2FTConfig, ModelConfig
+from repro.core import d2ft as d2ft_mod
+from repro.core.schedule import Schedule, gates_from_schedule, packed_indices
+from repro.core.scores import compute_scores, transformer_blocks, vit_blocks
+from repro.data.synthetic import microbatch_assignment
+from repro.models.transformer import lm_loss
+from repro.models.vit import ViTConfig, vit_loss
+from repro.optim.optimizers import Optimizer, clip_by_global_norm
+
+
+@dataclass
+class TrainLog:
+    losses: list = field(default_factory=list)
+    metrics: list = field(default_factory=list)
+    step_times: list = field(default_factory=list)
+
+    def last(self, k: str):
+        return self.metrics[-1][k] if self.metrics else None
+
+
+# ------------------------------------------------------------------ LLM path
+def make_train_step(cfg: ModelConfig, opt: Optimizer, *, use_gates: bool,
+                    packed: bool = False, policy=None, remat: bool = False,
+                    clip: float = 1.0):
+    """Returns jit-able step(params, opt_state, batch[, sched_args])."""
+
+    def loss_of(params, batch, sched_args):
+        if packed:
+            logits, aux = d2ft_mod.packed_forward(
+                params, cfg, batch["tokens"], sched_args, policy=policy,
+                remat=remat)
+            labels = batch["labels"]
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+            ll = jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+            return -jnp.mean(ll), {"ce": -jnp.mean(ll)}
+        gates = sched_args if use_gates else None
+        return lm_loss(params, cfg, batch.get("tokens"), batch["labels"],
+                       features=batch.get("features"), gates=gates,
+                       policy=policy, remat=remat)
+
+    def step(params, opt_state, batch, sched_args=None):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_of, has_aux=True)(params, batch, sched_args)
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        params, opt_state = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return step
+
+
+def plan_from_scores(cfg: ModelConfig, d2: D2FTConfig, params,
+                     score_batches, loss_fn) -> Schedule:
+    """Scoring pass (paper: before fine-tuning) + bi-level knapsack."""
+    G = d2.head_groups or max(cfg.n_heads, 1)
+    blocks_getter = functools.partial(transformer_blocks, cfg=cfg)
+    bw, fw = compute_scores(loss_fn, params,
+                            lambda t: transformer_blocks(t, cfg),
+                            score_batches, G,
+                            backward_metric=d2.backward_score,
+                            forward_metric=d2.forward_score)
+    return d2ft_mod.plan_schedule(d2, bw, fw, cfg.n_layers, G)
+
+
+def finetune(params, cfg: ModelConfig, d2: Optional[D2FTConfig],
+             opt: Optimizer, batches: Iterable, *, steps: int,
+             packed: bool = False, log: Optional[TrainLog] = None) -> tuple:
+    """Fine-tune; if d2 is given, schedule ops per batch via D2FT."""
+    log = log or TrainLog()
+    opt_state = opt.init(params)
+    step_fn = None
+    sched = None
+    for i, batch in enumerate(batches):
+        if i >= steps:
+            break
+        if d2 is not None and sched is None:
+            from repro.data.synthetic import split_microbatches
+            mbs = split_microbatches(batch, d2.n_microbatches)
+            sched = plan_from_scores(
+                cfg, d2, params, mbs,
+                lambda p, mb: lm_loss(p, cfg, mb.get("tokens"), mb["labels"],
+                                      features=mb.get("features"))[0])
+        if step_fn is None:
+            step_fn = jax.jit(make_train_step(
+                cfg, opt, use_gates=d2 is not None, packed=packed))
+        sched_args = None
+        if d2 is not None:
+            B = batch["labels"].shape[0]
+            mb_of = microbatch_assignment(B, d2.n_microbatches)
+            if packed:
+                idx, bwd, val, _ = packed_indices(sched, mb_of)
+                sched_args = (jnp.asarray(idx), jnp.asarray(bwd),
+                              jnp.asarray(val))
+            else:
+                sched_args = gates_from_schedule(sched, mb_of)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                             sched_args)
+        jax.block_until_ready(metrics["loss"])
+        log.step_times.append(time.perf_counter() - t0)
+        log.losses.append(float(metrics["loss"]))
+        log.metrics.append({k: float(v) for k, v in metrics.items()})
+    return params, opt_state, log
+
+
+# ------------------------------------------------------------------ ViT path
+def make_vit_step(cfg: ViTConfig, opt: Optimizer, use_gates: bool,
+                  clip: float = 1.0):
+    def step(params, opt_state, images, labels, gates=None):
+        def loss_of(p):
+            return vit_loss(p, images, labels, cfg,
+                            gates=gates if use_gates else None)
+        (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, dict(metrics, loss=loss, grad_norm=gnorm)
+    return step
+
+
+def finetune_vit(params, cfg: ViTConfig, opt: Optimizer, batches,
+                 steps: int, schedule_fn: Optional[Callable] = None,
+                 n_microbatches: int = 5, log: Optional[TrainLog] = None):
+    """schedule_fn(step_idx, params, images, labels) -> Schedule or None.
+
+    The schedule is rematerialized whenever schedule_fn returns a new one
+    (supports dynamic-pruning baselines that refresh every k iterations).
+    """
+    log = log or TrainLog()
+    opt_state = opt.init(params)
+    use_gates = schedule_fn is not None
+    step_fn = jax.jit(make_vit_step(cfg, opt, use_gates))
+    sched = None
+    for i, (images, labels) in enumerate(batches):
+        if i >= steps:
+            break
+        gates = None
+        if schedule_fn is not None:
+            new = schedule_fn(i, params, images, labels)
+            sched = new if new is not None else sched
+            mb_of = microbatch_assignment(images.shape[0], n_microbatches)
+            gates = gates_from_schedule(sched, mb_of)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(
+            params, opt_state, jnp.asarray(images), jnp.asarray(labels),
+            gates)
+        jax.block_until_ready(metrics["loss"])
+        log.step_times.append(time.perf_counter() - t0)
+        log.losses.append(float(metrics["loss"]))
+        log.metrics.append({k: float(v) for k, v in metrics.items()})
+    return params, opt_state, log
+
+
+def eval_vit(params, cfg: ViTConfig, batches, max_batches: int = 10) -> float:
+    from repro.models.vit import vit_forward
+    fwd = jax.jit(lambda p, x: vit_forward(p, x, cfg))
+    correct = total = 0
+    for i, (images, labels) in enumerate(batches):
+        if i >= max_batches:
+            break
+        pred = np.asarray(jnp.argmax(fwd(params, jnp.asarray(images)), -1))
+        correct += int((pred == labels).sum())
+        total += len(labels)
+    return correct / max(total, 1)

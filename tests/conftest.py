@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests must see exactly ONE CPU device (the dry-run sets its own flags in a
+# separate process). Keep XLA quiet and single-device.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,73 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.d2ft_attention import d2ft_flash_attention
+from repro.kernels.lora_matmul import lora_matmul
+from repro.kernels.ops import gated_attention, lora_linear
+from repro.kernels.ref import d2ft_attention_ref, lora_matmul_ref
+
+
+@pytest.mark.parametrize("S,hd,block", [(128, 64, 128), (256, 128, 128),
+                                        (256, 64, 64), (512, 32, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+def test_flash_attention_sweep(S, hd, block, dtype, causal, window):
+    key = jax.random.PRNGKey(0)
+    B, H = 2, 3
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, H, S, hd), dtype)
+    k = jax.random.normal(ks[1], (B, H, S, hd), dtype)
+    v = jax.random.normal(ks[2], (B, H, S, hd), dtype)
+    gates = jnp.asarray([[1., 0, 1], [0, 1, 1]])
+    out = d2ft_flash_attention(q, k, v, gates, causal=causal, window=window,
+                               block_q=block, block_k=block, interpret=True)
+    ref = d2ft_attention_ref(q, k, v, gates, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_flash_attention_gate_zero_rows_are_zero():
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (2, 2, 128, 64))
+    gates = jnp.asarray([[0., 1], [1., 0]])
+    out = d2ft_flash_attention(q, q, q, gates, interpret=True)
+    assert float(jnp.abs(out[0, 0]).max()) == 0.0
+    assert float(jnp.abs(out[1, 1]).max()) == 0.0
+    assert float(jnp.abs(out[0, 1]).max()) > 0.0
+
+
+@pytest.mark.parametrize("M,K,N,r", [(256, 128, 256, 4), (512, 384, 512, 16),
+                                     (256, 256, 512, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lora_matmul_sweep(M, K, N, r, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (M, K), dtype)
+    w = jax.random.normal(ks[1], (K, N), dtype)
+    a = jax.random.normal(ks[2], (K, r), dtype)
+    b = jax.random.normal(ks[3], (r, N), dtype)
+    y = lora_matmul(x, w, a, b, 0.5, interpret=True)
+    ref = lora_matmul_ref(x, w, a, b, 0.5)
+    tol = 2e-1 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol * np.abs(np.asarray(ref)).max(),
+                               rtol=tol)
+
+
+def test_ops_wrappers_jit():
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x3 = jax.random.normal(ks[0], (2, 128, 128))
+    w = jax.random.normal(ks[1], (128, 256))
+    a = jax.random.normal(ks[2], (128, 8))
+    b = jax.random.normal(ks[3], (8, 256))
+    y = lora_linear(x3, w, a, b, 1.0)
+    assert y.shape == (2, 128, 256)
+    q = jax.random.normal(ks[0], (1, 2, 128, 64))
+    g = jnp.ones((1, 2))
+    o = gated_attention(q, q, q, g)
+    assert o.shape == q.shape

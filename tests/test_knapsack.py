@@ -1,0 +1,64 @@
+"""Knapsack DP: optimality vs brute force (hypothesis), jax DP parity,
+bi-level semantics (Eqs. 7/8), Algorithm 1 merge."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.knapsack import (bilevel_select, brute_force, dp_knapsack,
+                                 dp_knapsack_value_jax, scalarized_select)
+from repro.core.schedule import P_F, P_O, P_S, merge_tables
+
+
+@st.composite
+def knapsack_instance(draw):
+    n = draw(st.integers(1, 10))
+    values = draw(st.lists(st.floats(0.0, 10.0), min_size=n, max_size=n))
+    weights = draw(st.lists(st.integers(1, 6), min_size=n, max_size=n))
+    cap = draw(st.integers(0, 18))
+    return np.asarray(values), np.asarray(weights, float), float(cap)
+
+
+@settings(max_examples=60, deadline=None)
+@given(knapsack_instance())
+def test_dp_matches_brute_force(inst):
+    v, w, c = inst
+    sel = dp_knapsack(v, w, c)
+    assert w[sel].sum() <= c + 1e-9
+    best, _ = brute_force(v, w, c)
+    assert v[sel].sum() == pytest.approx(best, abs=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(knapsack_instance())
+def test_jax_dp_value_matches_numpy(inst):
+    v, w, c = inst
+    sel = dp_knapsack(v, w, c)
+    jv = dp_knapsack_value_jax(v, (w * 100).astype(int), int(c * 100))
+    assert float(jv) == pytest.approx(v[sel].sum(), rel=1e-5, abs=1e-5)
+
+
+def test_bilevel_budget_counts():
+    rng = np.random.default_rng(0)
+    bw = rng.random(5) + 0.1
+    fw = rng.random(5) + 0.1
+    # paper setting: c_f=0.4, c_b=0.6, capacity 3 p_f + 1 p_o
+    sel_pf, sel_po = bilevel_select(bw, fw, 0.4, 0.6, 3.0, 0.4)
+    assert sel_pf.sum() == 3
+    assert sel_po.sum() == 1
+
+
+def test_merge_table_semantics():
+    sel_pf = np.array([[True, False, False, True]])
+    sel_po = np.array([[True, True, False, False]])
+    t = merge_tables(sel_pf, sel_po)
+    assert t.tolist() == [[P_F, P_O, P_S, P_F]]  # pf wins conflict
+
+
+def test_scalarized_respects_budget():
+    rng = np.random.default_rng(1)
+    bw, fw = rng.random(6), rng.random(6)
+    sel_pf, sel_po = scalarized_select(bw, fw, lam=0.2, c_f=0.4, c_b=0.6,
+                                       cap_total=3.4)
+    cost = sel_pf.sum() * 1.0 + sel_po.sum() * 0.4
+    assert cost <= 3.4 + 1e-9
+    assert not (sel_pf & sel_po).any()
