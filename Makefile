@@ -1,0 +1,17 @@
+# Tier-1 verify command (ROADMAP.md) and common dev entry points.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-kernels bench quickstart
+
+test:
+	$(PY) -m pytest -x -q
+
+test-kernels:
+	$(PY) -m pytest -x -q tests/test_kernels.py tests/test_kernel_grads.py
+
+bench:
+	$(PY) -m benchmarks.run $(if $(ONLY),--only $(ONLY))
+
+quickstart:
+	$(PY) examples/quickstart.py

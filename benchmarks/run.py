@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import argparse
 import sys
+import time
 
 import numpy as np
 
@@ -294,6 +295,61 @@ def bench_packed_flops():
          f"fraction={f_packed / f_full:.3f};cost_model=0.60")
 
 
+# ------------------------------------------- gated kernel backward savings
+def bench_kernel_backward():
+    """Kernel-path fwd+bwd vs the masked jnp reference across p_f/p_o/p_s
+    mixes: wall time per fwd+grad call, plus the executed-MXU-FLOP account
+    of the gate-aware kernels (static HLO FLOP counts cannot see runtime
+    ``@pl.when`` skips — the interpret-mode grid lowers to a loop whose body
+    XLA counts once; see docs/kernels.md)."""
+    from repro.kernels.d2ft_attention import gated_attention_flops
+    from repro.kernels.ops import gated_attention
+    from repro.kernels.ref import gated_attention_ref
+
+    B, H, S, hd = 4, 4, 256, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q, k, v, ct = (jax.random.normal(kk, (B, H, S, hd)) for kk in ks)
+    rng = np.random.default_rng(0)
+    full_fwd, full_bwd = gated_attention_flops(
+        np.ones((B, H)), np.ones((B, H)), S, hd, causal=True)
+
+    def timed(fn):
+        jax.block_until_ready(fn(q, k, v))          # compile + warm
+        n = 3
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(fn(q, k, v))
+        return (time.perf_counter() - t0) / n * 1e6
+
+    # micro-batch mixes as (p_f, p_o, p_s) fractions of the (B, H) subnets
+    for name, probs in [("pf5_po0_ps0", (1.0, 0.0, 0.0)),
+                        ("pf3_po1_ps1", (0.6, 0.2, 0.2)),
+                        ("pf1_po2_ps2", (0.2, 0.4, 0.4))]:
+        ops_ = rng.choice(3, size=(B, H), p=probs)
+        g_f = jnp.asarray((ops_ != 2).astype(np.float32))
+        g_b = jnp.asarray((ops_ == 0).astype(np.float32))
+
+        def loss_kernel(q, k, v):
+            # interpret auto-detects: compiled on TPU, interpreter on CPU
+            out = gated_attention(q, k, v, g_f, g_b)
+            return (out * ct).sum()
+
+        def loss_ref(q, k, v):
+            out = gated_attention_ref(q, k, v, g_f, g_b)
+            return (out * ct).sum()
+
+        kern = jax.jit(jax.value_and_grad(loss_kernel, argnums=(0, 1, 2)))
+        refp = jax.jit(jax.value_and_grad(loss_ref, argnums=(0, 1, 2)))
+        kern_us, ref_us = timed(kern), timed(refp)
+        e_fwd, e_bwd = gated_attention_flops(np.asarray(g_f), np.asarray(g_b),
+                                             S, hd, causal=True)
+        frac = (e_fwd + e_bwd) / (full_fwd + full_bwd)
+        emit(f"kernel_bwd_{name}", kern_us,
+             f"ref_us={ref_us:.1f};executed_mxu_gflop={(e_fwd + e_bwd) / 1e9:.3f};"
+             f"full_mxu_gflop={(full_fwd + full_bwd) / 1e9:.3f};"
+             f"executed_fraction={frac:.3f}")
+
+
 BENCHES = {
     "workload_variance": bench_workload_variance,
     "execution_time": bench_execution_time,
@@ -307,6 +363,7 @@ BENCHES = {
     "bilevel_vs_scaler": bench_bilevel_vs_scaler,
     "lora": bench_lora,
     "packed_flops": bench_packed_flops,
+    "kernel_backward": bench_kernel_backward,
 }
 
 

@@ -1,18 +1,36 @@
-"""Pallas TPU kernel: D2FT-gated flash attention.
+"""Pallas TPU kernels: D2FT-gated flash attention, forward *and* backward.
 
-The paper skips a subnet's forward entirely for shortcut (p_s) micro-batches
-— on a GPU cluster the subnet's device simply idles. The TPU analogue is a
-flash-attention kernel with a per-(sample, head) gate operand: when
-``gate == 0`` the whole online-softmax KV loop for that (batch, head) grid
-slice is skipped with ``@pl.when`` and zeros are written once, so the MXU
-never sees the block. Supports causal and sliding-window masks (the
-assigned archs' local-attention layers).
+The paper skips a subnet's work per micro-batch: p_s (shortcut) skips the
+subnet entirely, p_o (forward-only) runs the forward but skips the backward.
+On a GPU cluster the subnet's device simply idles; the TPU analogue is a
+flash-attention kernel family with per-(sample, head) gate operands:
+
+* forward kernel, gate ``g_f``: when ``g_f == 0`` the whole online-softmax
+  KV loop for that (batch, head) grid slice is skipped with ``@pl.when`` and
+  zeros are written once, so the MXU never sees the block (p_s).
+* backward kernels (dq; dk/dv on the transposed grid), gate ``g_b``: when
+  ``g_b == 0`` every backward matmul for the slice is skipped the same way
+  and zero gradients are written once (p_o *and* p_s) — this is where the
+  paper's headline ~40% training-compute saving lives, since the backward
+  is ~60% of attention FLOPs.
+
+Supports causal and sliding-window masks (the assigned archs' local
+-attention layers).
 
 Tiling: q tiles [block_q, head_dim], kv tiles [block_k, head_dim] — both
-MXU-aligned (multiples of 128 for fp32/bf16 lanes); the fp32 accumulator
-(block_q × head_dim) plus m/l statistics live in VMEM scratch. The KV axis
-is the innermost (sequential) grid dim, so the scratch carries across kv
-steps; fully-masked causal blocks are skipped with @pl.when as well.
+MXU-aligned (multiples of 128 for fp32/bf16 lanes). Forward scratch: the
+fp32 accumulator (block_q × head_dim) plus m/l online-softmax statistics in
+VMEM; the KV axis is the innermost (sequential) grid dim so scratch carries
+across kv steps. The forward additionally emits the logsumexp residual
+[B, H, S] consumed by the backward kernels (the paper-standard
+o/lse-residual flash backward — s and p are recomputed blockwise instead of
+materializing [S, S]). Fully-masked causal/window blocks are skipped with
+``@pl.when`` in every kernel.
+
+``gated_flash_attention`` is the differentiable custom-VJP entry point;
+``d2ft_flash_attention`` remains the forward-only op. The jit'd public
+wrapper with interpret auto-detection is ``repro.kernels.ops
+.gated_attention``; the pure-jnp oracles live in ``repro.kernels.ref``.
 """
 from __future__ import annotations
 
@@ -23,12 +41,56 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
 NEG_INF = -2.0 ** 30
+# logsumexp stored for rows that never saw a live key: large *positive* so
+# exp(s - LSE_MASKED) underflows to exactly 0 in the backward for any score.
+LSE_MASKED = 2.0 ** 30
+
+# Test hook: when set to a callable, the backward kernels invoke it (via
+# jax.debug.callback) once per *executed* compute block. Lets tests assert
+# that g_b == 0 slices do no backward matmul work — static HLO FLOP counts
+# cannot see the skip because interpret mode lowers the grid to a loop whose
+# body XLA counts once regardless of trip count or taken branches. The hook
+# is read at trace time: set it before the first trace of the function under
+# test (avoid pre-cached jits).
+on_backward_block = None
 
 
-def _kernel(gate_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-            scale: float, causal: bool, window: int, block_q: int,
-            block_k: int, n_k: int, seq_len: int):
+def _maybe_count_block():
+    if on_backward_block is not None:
+        jax.debug.callback(on_backward_block)
+
+
+def _block_live(qpos0, kpos0, block_q: int, block_k: int, causal: bool,
+                window: int, seq_len: int):
+    """Whether the (iq, ik) tile contains any unmasked in-bounds entry
+    (tiles fully in the seq_len padding region are skipped too)."""
+    live = jnp.logical_and(qpos0 < seq_len, kpos0 < seq_len)
+    if causal:
+        live &= kpos0 <= qpos0 + block_q - 1
+    if window and window > 0:
+        live &= kpos0 + block_k - 1 > qpos0 - window
+    return live
+
+
+def _tile_mask(qpos0, kpos0, block_q: int, block_k: int, seq_len: int,
+               causal: bool, window: int):
+    qpos = qpos0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = kpos0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kpos < seq_len
+    if causal:
+        mask &= kpos <= qpos
+    if window and window > 0:
+        mask &= kpos > qpos - window
+    return mask
+
+
+# ================================================================== forward
+def _fwd_kernel(gate_ref, q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref,
+                m_ref, l_ref, *, scale: float, causal: bool, window: int,
+                block_q: int, block_k: int, n_k: int, seq_len: int):
     iq = pl.program_id(2)
     ik = pl.program_id(3)
     gate = gate_ref[0, 0]
@@ -39,15 +101,12 @@ def _kernel(gate_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    # block-level skip: gate==0 (p_s subnet) or fully-masked causal block
+    # block-level skip: gate==0 (p_s subnet) or fully-masked block
     qpos0 = iq * block_q
     kpos0 = ik * block_k
-    block_live = jnp.bool_(True)
-    if causal:
-        block_live &= kpos0 <= qpos0 + block_q - 1
-    if window and window > 0:
-        block_live &= kpos0 + block_k - 1 > qpos0 - window
-    run = jnp.logical_and(gate != 0, block_live)
+    run = jnp.logical_and(
+        gate != 0, _block_live(qpos0, kpos0, block_q, block_k, causal,
+                               window, seq_len))
 
     @pl.when(run)
     def _compute():
@@ -56,13 +115,8 @@ def _kernel(gate_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         v = v_ref[0, 0].astype(jnp.float32)
         s = jax.lax.dot_general(q * scale, k,
                                 (((1,), (1,)), ((), ())))   # [bq, bk]
-        qpos = qpos0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
-        kpos = kpos0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
-        mask = kpos < seq_len
-        if causal:
-            mask &= kpos <= qpos
-        if window and window > 0:
-            mask &= kpos > qpos - window
+        mask = _tile_mask(qpos0, kpos0, block_q, block_k, seq_len, causal,
+                          window)
         s = jnp.where(mask, s, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
@@ -81,44 +135,335 @@ def _kernel(gate_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         out = jnp.where((l > 0)[:, None], out, 0.0)
         out = out * gate.astype(jnp.float32)
         o_ref[0, 0] = out.astype(o_ref.dtype)
+        lse_ref[0, 0] = jnp.where(l > 0, m_ref[...] + jnp.log(safe),
+                                  LSE_MASKED)
 
 
-def d2ft_flash_attention(q, k, v, gates, *, causal: bool = True,
-                         window: int = 0, block_q: int = 128,
-                         block_k: int = 128, interpret: bool = False):
-    """q, k, v: [B, H, S, hd] (kv heads already expanded to H);
-    gates: [B, H] float {0,1}. Returns [B, H, S, hd]."""
+def _forward(q, k, v, g_f, *, causal: bool, window: int, block_q: int,
+             block_k: int, interpret: bool, seq_len: int = 0):
+    """Returns (o [B,H,S,hd], lse [B,H,S] f32). seq_len is the true length
+    when the arrays carry tile padding (0 means unpadded)."""
     B, H, S, hd = q.shape
-    block_q = min(block_q, S)
-    block_k = min(block_k, S)
     assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    seq_len = seq_len or S
     n_q = S // block_q
     n_k = S // block_k
     scale = 1.0 / (hd ** 0.5)
 
     kernel = functools.partial(
-        _kernel, scale=scale, causal=causal, window=window, block_q=block_q,
-        block_k=block_k, n_k=n_k, seq_len=S)
+        _fwd_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_k=n_k, seq_len=seq_len)
 
     return pl.pallas_call(
         kernel,
         grid=(B, H, n_q, n_k),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda b, h, iq, ik: (b, h)),          # gates
+            pl.BlockSpec((1, 1), lambda b, h, iq, ik: (b, h)),          # g_f
             pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
             pl.BlockSpec((1, 1, block_k, hd), lambda b, h, iq, ik: (b, h, ik, 0)),
             pl.BlockSpec((1, 1, block_k, hd), lambda b, h, iq, ik: (b, h, ik, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, block_q, hd),
-                               lambda b, h, iq, ik: (b, h, iq, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+            jax.ShapeDtypeStruct((B, H, S), jnp.float32),
+        ],
         scratch_shapes=[
             pltpu.VMEM((block_q, hd), jnp.float32),   # acc
             pltpu.VMEM((block_q,), jnp.float32),      # m
             pltpu.VMEM((block_q,), jnp.float32),      # l
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(gates, q, k, v)
+    )(g_f, q, k, v)
+
+
+def d2ft_flash_attention(q, k, v, gates, *, causal: bool = True,
+                         window: int = 0, block_q: int = 128,
+                         block_k: int = 128, interpret: bool = False):
+    """Forward-only gated flash attention (no VJP registered).
+
+    q, k, v: [B, H, S, hd] (kv heads already expanded to H);
+    gates: [B, H] float {0,1}. Returns [B, H, S, hd]. For the
+    differentiable path use ``gated_flash_attention`` / ``ops.gated_attention``.
+    """
+    B, H, S, hd = q.shape
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    return _forward(q, k, v, gates, causal=causal, window=window,
+                    block_q=block_q, block_k=block_k, interpret=interpret)[0]
+
+
+# ================================================================= backward
+def _bwd_dq_kernel(gate_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                   dq_ref, acc_ref, *, scale: float, causal: bool,
+                   window: int, block_q: int, block_k: int, n_k: int,
+                   seq_len: int):
+    """dq, grid (B, H, n_q, n_k) — kv innermost so the dq tile accumulates
+    in VMEM scratch. ``g_b == 0`` skips every matmul; zeros written once."""
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    gate = gate_ref[0, 0]
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qpos0 = iq * block_q
+    kpos0 = ik * block_k
+    run = jnp.logical_and(
+        gate != 0, _block_live(qpos0, kpos0, block_q, block_k, causal,
+                               window, seq_len))
+
+    @pl.when(run)
+    def _compute():
+        _maybe_count_block()
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)          # [bq, hd]
+        lse = lse_ref[0, 0]                            # [bq]
+        delta = delta_ref[0, 0]                        # [bq]
+        s = jax.lax.dot_general(q * scale, k,
+                                (((1,), (1,)), ((), ())))   # [bq, bk]
+        mask = _tile_mask(qpos0, kpos0, block_q, block_k, seq_len, causal,
+                          window)
+        s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])                  # [bq, bk]
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+        ds = p * (dp - delta[:, None])
+        acc_ref[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ()))) * scale
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        dq_ref[0, 0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(gate_ref, q_ref, k_ref, v_ref, do_ref, lse_ref,
+                    delta_ref, dk_ref, dv_ref, dk_acc, dv_acc, *,
+                    scale: float, causal: bool, window: int, block_q: int,
+                    block_k: int, n_q: int, seq_len: int):
+    """dk/dv, transposed grid (B, H, n_k, n_q) — q innermost so the dk/dv
+    tiles accumulate in VMEM scratch while the kv tile stays resident."""
+    ik = pl.program_id(2)
+    iq = pl.program_id(3)
+    gate = gate_ref[0, 0]
+
+    @pl.when(iq == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    qpos0 = iq * block_q
+    kpos0 = ik * block_k
+    run = jnp.logical_and(
+        gate != 0, _block_live(qpos0, kpos0, block_q, block_k, causal,
+                               window, seq_len))
+
+    @pl.when(run)
+    def _compute():
+        _maybe_count_block()
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)          # [bq, hd]
+        lse = lse_ref[0, 0]
+        delta = delta_ref[0, 0]
+        s = jax.lax.dot_general(q * scale, k,
+                                (((1,), (1,)), ((), ())))   # [bq, bk]
+        mask = _tile_mask(qpos0, kpos0, block_q, block_k, seq_len, causal,
+                          window)
+        s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])                  # [bq, bk]
+        dv_acc[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())))
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+        ds = p * (dp - delta[:, None])                 # [bq, bk]
+        dk_acc[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ()))) * scale
+
+    @pl.when(iq == n_q - 1)
+    def _finalize():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _backward(q, k, v, g_b, o, lse, do, *, causal: bool, window: int,
+              block_q: int, block_k: int, interpret: bool, seq_len: int = 0):
+    B, H, S, hd = q.shape
+    seq_len = seq_len or S
+    n_q = S // block_q
+    n_k = S // block_k
+    scale = 1.0 / (hd ** 0.5)
+    # delta_i = sum_d dO_id * O_id — cheap elementwise reduce, done outside
+    # the kernels (standard flash-bwd preprocessing).
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+
+    gate_spec = pl.BlockSpec((1, 1), lambda b, h, i, j: (b, h))
+    params = _CompilerParams(
+        dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"))
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, scale=scale, causal=causal,
+                          window=window, block_q=block_q, block_k=block_k,
+                          n_k=n_k, seq_len=seq_len),
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            gate_spec,                                                  # g_b
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, hd), jnp.float32)],
+        compiler_params=params,
+        interpret=interpret,
+    )(g_b, q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, scale=scale, causal=causal,
+                          window=window, block_q=block_q, block_k=block_k,
+                          n_q=n_q, seq_len=seq_len),
+        grid=(B, H, n_k, n_q),
+        in_specs=[
+            gate_spec,                                                  # g_b
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, ik, iq: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ik, iq: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ik, iq: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, ik, iq: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, ik, iq: (b, h, iq)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, ik, iq: (b, h, iq)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, ik, iq: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, ik, iq: (b, h, ik, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, hd), k.dtype),
+            jax.ShapeDtypeStruct((B, H, S, hd), v.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_k, hd), jnp.float32),
+                        pltpu.VMEM((block_k, hd), jnp.float32)],
+        compiler_params=params,
+        interpret=interpret,
+    )(g_b, q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+# =============================================================== custom VJP
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10))
+def gated_flash_attention(q, k, v, g_f, g_b, causal, window, block_q,
+                          block_k, interpret, seq_len=0):
+    """Differentiable gated flash attention core.
+
+    Forward output is ``g_f``-gated (p_s heads produce zeros, MXU skipped);
+    the registered backward returns dq/dk/dv that are *computed* only where
+    ``g_b != 0`` — p_o / p_s slices skip every backward matmul via
+    ``@pl.when`` and write zeros once. Gates receive zero cotangents (they
+    are schedule constants). seq_len is the true length when the operands
+    carry tile padding (0 = unpadded). Prefer the jit'd
+    ``ops.gated_attention``, which also picks tile sizes and padding.
+    """
+    o, _ = _forward(q, k, v, g_f, causal=causal, window=window,
+                    block_q=block_q, block_k=block_k, interpret=interpret,
+                    seq_len=seq_len)
+    return o
+
+
+def _vjp_fwd(q, k, v, g_f, g_b, causal, window, block_q, block_k, interpret,
+             seq_len=0):
+    o, lse = _forward(q, k, v, g_f, causal=causal, window=window,
+                      block_q=block_q, block_k=block_k, interpret=interpret,
+                      seq_len=seq_len)
+    return o, (q, k, v, g_f, g_b, o, lse)
+
+
+def _vjp_bwd(causal, window, block_q, block_k, interpret, seq_len, res, do):
+    q, k, v, g_f, g_b, o, lse = res
+    dq, dk, dv = _backward(q, k, v, g_b, o, lse, do, causal=causal,
+                           window=window, block_q=block_q, block_k=block_k,
+                           interpret=interpret, seq_len=seq_len)
+    return dq, dk, dv, jnp.zeros_like(g_f), jnp.zeros_like(g_b)
+
+
+gated_flash_attention.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+# ======================================================= tile selection
+def _largest_divisor(S: int, block: int) -> int:
+    b = min(block, S)
+    while S % b:
+        b -= 1
+    return b
+
+
+def select_blocks(S: int, block_q: int, block_k: int):
+    """(block_q, block_k, padded_S) used by ``ops.gated_attention`` AND the
+    FLOP accounting below — one source of truth for tile geometry.
+
+    Exact fit when S divides the requested tiles; otherwise shrink to a
+    divisor if one exists within 2x of the request (stays near MXU width);
+    otherwise keep the requested tiles and pad S up to a common multiple —
+    never degenerate slivers (e.g. S=257 pads to 384 with 128-tiles instead
+    of running 1-wide tiles the TPU lowering would reject)."""
+    import math
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    if S % bq == 0 and S % bk == 0:
+        return bq, bk, S
+    dq_ = _largest_divisor(S, bq)
+    dk_ = _largest_divisor(S, bk)
+    if dq_ >= bq // 2 and dk_ >= bk // 2:
+        return dq_, dk_, S
+    m = math.lcm(bq, bk)
+    return bq, bk, -(-S // m) * m
+
+
+# ======================================================== analytic accounting
+def live_block_count(S: int, block_q: int, block_k: int, causal: bool,
+                     window: int, seq_len: int = 0) -> int:
+    """Number of (iq, ik) tiles the kernels execute per live (batch, head)
+    slice — the same block-granular predicate as the ``@pl.when`` skip.
+    S is the (possibly padded) grid extent; seq_len the true length."""
+    seq_len = seq_len or S
+    n_q, n_k = S // block_q, S // block_k
+    return sum(
+        bool(_block_live(iq * block_q, ik * block_k, block_q, block_k,
+                         causal, window, seq_len))
+        for iq in range(n_q) for ik in range(n_k))
+
+
+def gated_attention_flops(g_f, g_b, S: int, hd: int, *, causal: bool = True,
+                          window: int = 0, block_q: int = 128,
+                          block_k: int = 128):
+    """Executed MXU FLOPs (fwd, bwd) of the kernel path under concrete gates.
+
+    Uses the same tile geometry as ``ops.gated_attention`` (select_blocks,
+    including padding) and the same block-granular skip predicate: 2 matmuls
+    per live tile forward (qk^T, pv); 7 backward — the split dq / dkv
+    kernels each recompute s and dp (3 + 4) in exchange for no cross-tile
+    output revisits. Each matmul is 2·bq·bk·hd FLOPs. Static HLO FLOP
+    counts can't report this (interpret mode lowers the grid to a loop
+    whose body is counted once), hence this mirror of the kernel's own
+    skip logic.
+    """
+    import numpy as np
+    bq, bk, Sp = select_blocks(S, block_q, block_k)
+    tiles = live_block_count(Sp, bq, bk, causal, window, seq_len=S)
+    per_matmul = 2 * bq * bk * hd
+    fwd = float(np.sum(np.asarray(g_f) != 0)) * tiles * 2 * per_matmul
+    bwd = float(np.sum(np.asarray(g_b) != 0)) * tiles * 7 * per_matmul
+    return fwd, bwd

@@ -11,7 +11,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.d2ft_attention import d2ft_flash_attention
+from repro.kernels.d2ft_attention import (d2ft_flash_attention,
+                                          gated_flash_attention,
+                                          select_blocks)
 from repro.kernels.lora_matmul import lora_matmul
 from repro.kernels import ref
 
@@ -24,13 +26,34 @@ def _auto_interpret(interpret: Optional[bool]) -> bool:
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
                                              "block_k", "interpret"))
-def gated_attention(q, k, v, gates, *, causal: bool = True, window: int = 0,
-                    block_q: int = 128, block_k: int = 128,
+def gated_attention(q, k, v, g_f, g_b=None, *, causal: bool = True,
+                    window: int = 0, block_q: int = 128, block_k: int = 128,
                     interpret: Optional[bool] = None):
-    """D2FT-gated flash attention. q,k,v: [B, H, S, hd]; gates: [B, H]."""
-    return d2ft_flash_attention(
-        q, k, v, gates, causal=causal, window=window, block_q=block_q,
-        block_k=block_k, interpret=_auto_interpret(interpret))
+    """D2FT-gated flash attention with a gate-aware backward (custom VJP).
+
+    q, k, v: [B, H, S, hd]; g_f, g_b: [B, H] float {0,1} with g_b <= g_f.
+    g_f gates the forward (0 -> zeros and no forward MXU work: p_s); g_b
+    gates the backward kernels (0 -> zero dq/dk/dv and no backward MXU
+    work: p_o and p_s). Omitting g_b uses g_b = g_f, i.e. the fully
+    differentiable p_f path (back-compat with the forward-only API).
+
+    Sequence lengths that don't divide the tiles either shrink the tiles
+    (near-divisor case) or zero-pad S (select_blocks); padded rows/tiles
+    are masked via the kernels' seq_len bound and sliced off, and jnp.pad's
+    VJP routes the padding out of the gradients.
+    """
+    if g_b is None:
+        g_b = g_f
+    B, H, S, _ = q.shape
+    assert g_f.shape == (B, H) and g_b.shape == (B, H), \
+        f"gates must be [B={B}, H={H}], got {g_f.shape} / {g_b.shape}"
+    bq, bk, Sp = select_blocks(S, block_q, block_k)
+    if Sp != S:
+        pad = ((0, 0), (0, 0), (0, Sp - S), (0, 0))
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    out = gated_flash_attention(q, k, v, g_f, g_b, causal, window, bq, bk,
+                                _auto_interpret(interpret), S)
+    return out[:, :, :S] if Sp != S else out
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "block_m", "block_n",

@@ -1,4 +1,10 @@
-"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets).
+
+``gated_attention_ref`` is also the *reference VJP*: its forward matches the
+kernel path and differentiating it with ``jax.grad``/``jax.vjp`` produces
+the target dq/dk/dv for grad-parity tests — the stop-gradient mix encodes
+the p_f / p_o / p_s semantics exactly (see models.transformer.gate_mix).
+"""
 from __future__ import annotations
 
 import jax
@@ -7,16 +13,12 @@ import jax.numpy as jnp
 NEG_INF = -2.0 ** 30
 
 
-def d2ft_attention_ref(q, k, v, gates, *, causal: bool = True,
-                       window: int = 0):
-    """Gated attention oracle.
-
-    q, k, v: [B, H, S, hd]; gates: [B, H] in {0, 1} — 0 means the
-    (micro-batch sample, head) subnet is shortcut (p_s): output is zeros.
-    """
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """Ungated attention oracle; q, k, v: [B, H, S, hd]. Returns f32."""
     B, H, S, hd = q.shape
     scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
-    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
     qpos = jnp.arange(S)[:, None]
     kpos = jnp.arange(S)[None, :]
     mask = jnp.ones((S, S), bool)
@@ -26,8 +28,34 @@ def d2ft_attention_ref(q, k, v, gates, *, causal: bool = True,
         mask &= kpos > qpos - window
     s = jnp.where(mask[None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+
+
+def d2ft_attention_ref(q, k, v, gates, *, causal: bool = True,
+                       window: int = 0):
+    """Gated attention oracle.
+
+    q, k, v: [B, H, S, hd]; gates: [B, H] in {0, 1} — 0 means the
+    (micro-batch sample, head) subnet is shortcut (p_s): output is zeros.
+    """
+    out = attention_ref(q, k, v, causal=causal, window=window)
     out = out * gates[:, :, None, None].astype(jnp.float32)
+    return out.astype(q.dtype)
+
+
+def gated_attention_ref(q, k, v, g_f, g_b, *, causal: bool = True,
+                        window: int = 0):
+    """Reference VJP oracle for ``ops.gated_attention``.
+
+    Forward: g_f * attention (p_s heads zeroed). Backward: gradients flow
+    only where g_b == 1 — the (1 - g_b) share routes through stop_gradient,
+    so p_o heads keep their forward value but contribute zero dq/dk/dv.
+    Gates are schedule constants in {0, 1} with g_b <= g_f elementwise.
+    """
+    out = attention_ref(q, k, v, causal=causal, window=window)
+    gf = g_f[:, :, None, None].astype(jnp.float32)
+    gb = g_b[:, :, None, None].astype(jnp.float32)
+    out = gf * (gb * out + (1.0 - gb) * jax.lax.stop_gradient(out))
     return out.astype(q.dtype)
 
 

@@ -11,22 +11,33 @@ XLA_FLAGS for 512 host devices before any jax import).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax.sharding.AxisType (and the axis_types kwarg) appeared after 0.4.37
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
+
+
+def compat_make_mesh(shape, axes):
+    """jax.make_mesh across jax versions: passes axis_types=Auto when the
+    installed jax supports it, plain make_mesh otherwise."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1):
     """Tiny mesh over however many local devices exist (tests/examples)."""
     n = len(jax.devices())
     data = n // model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return compat_make_mesh((data, model), ("data", "model"))
 
 
 # TPU v5e hardware constants used by the roofline analysis.

@@ -59,6 +59,27 @@ def _repeat_kv(k, Hq: int):
     return jnp.repeat(k, Hq // Hkv, axis=2)
 
 
+def gated_kernel_attention(q, k, v, g_f, g_b, *, causal: bool,
+                           window: int = 0,
+                           interpret: Optional[bool] = None):
+    """Pallas-kernel attention with D2FT (g_f, g_b) head gates.
+
+    q: [B,S,Hq,hd]; k, v: [B,S,Hkv,hd] (GQA expanded here); g_f, g_b:
+    [B,Hq] in {0,1}. Returns [B,S,Hq,hd]. Forward output is g_f-gated (p_s
+    heads are zeros and skip the MXU); the custom-VJP backward skips every
+    (sample, head) slice with g_b == 0 inside the kernel (p_o and p_s), so
+    forward-only micro-batches never pay attention-backward FLOPs.
+    """
+    from repro.kernels.ops import gated_attention
+    Hq = q.shape[2]
+    k = _repeat_kv(k, Hq)
+    v = _repeat_kv(v, Hq)
+    out = gated_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), g_f, g_b, causal=causal,
+                          window=window, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
 def _sdpa(q, k, v, mask):
     """q: [B,Sq,Hq,hd]; k,v: [B,Sk,Hkv,hd]; mask: broadcastable
     [B,1,Sq,Sk] boolean (True = attend). GQA via KV head repetition."""

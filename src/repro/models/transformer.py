@@ -87,7 +87,8 @@ def _split_gates(gates, idx):
 
 
 # ============================================================= block forward
-def _apply_attn_inner(p, h, kind, cfg: ModelConfig, layer_gates, policy):
+def _apply_attn_inner(p, h, kind, cfg: ModelConfig, layer_gates, policy,
+                      use_kernel: bool = False):
     """Attention contribution (pre-residual), with per-head-group gating."""
     window = cfg.window if kind == ATTN_LOCAL else 0
     hd = cfg.resolved_head_dim
@@ -104,22 +105,40 @@ def _apply_attn_inner(p, h, kind, cfg: ModelConfig, layer_gates, policy):
         pos = jnp.arange(S)[None, :]
         q = attn.apply_rope(q, pos, cfg.rope_theta)
         k = attn.apply_rope(k, pos, cfg.rope_theta)
-    if policy is not None:
-        q, k, v = policy.heads(q), policy.kv(k), policy.kv(v)
-    chunk = policy.attn_q_chunk if policy is not None else 0
-    if window and window > 0 and S > 2 * window and S % window == 0:
-        out = attn._block_local_attention(q, k, v, window)
-    elif chunk and chunk > 0 and S % chunk == 0 and S > chunk:
-        out = attn._chunked_sdpa(q, k, v, chunk, causal=cfg.causal,
-                                 window=window)
-    elif window and window > 0:
-        out = attn._sdpa(q, k, v, attn._window_mask(S, S, window))
-    elif cfg.causal:
-        out = attn._sdpa(q, k, v, attn._causal_mask(S, S))
+    if use_kernel and policy is None:
+        # Pallas kernel path: the gated flash kernel computes attention with
+        # g_f forward gates and a custom VJP whose backward kernels skip all
+        # g_b == 0 (sample, head) slices (see kernels/d2ft_attention.py).
+        # The window branch is always causal-windowed, matching _window_mask.
+        if layer_gates is None:
+            gf_h = gb_h = jnp.ones((B, n_heads), h.dtype)
+        else:
+            g_f, g_b = layer_gates
+            rep = n_heads // g_f.shape[-1]
+            gf_h = jnp.repeat(g_f, rep, axis=1).astype(h.dtype)
+            gb_h = jnp.repeat(g_b, rep, axis=1).astype(h.dtype)
+        out = attn.gated_kernel_attention(q, k, v, gf_h, gb_h,
+                                          causal=cfg.causal or window > 0,
+                                          window=window)
     else:
-        out = attn._sdpa(q, k, v, jnp.ones((1, 1, S, S), bool))
+        if policy is not None:
+            q, k, v = policy.heads(q), policy.kv(k), policy.kv(v)
+        chunk = policy.attn_q_chunk if policy is not None else 0
+        if window and window > 0 and S > 2 * window and S % window == 0:
+            out = attn._block_local_attention(q, k, v, window)
+        elif chunk and chunk > 0 and S % chunk == 0 and S > chunk:
+            out = attn._chunked_sdpa(q, k, v, chunk, causal=cfg.causal,
+                                     window=window)
+        elif window and window > 0:
+            out = attn._sdpa(q, k, v, attn._window_mask(S, S, window))
+        elif cfg.causal:
+            out = attn._sdpa(q, k, v, attn._causal_mask(S, S))
+        else:
+            out = attn._sdpa(q, k, v, jnp.ones((1, 1, S, S), bool))
     if layer_gates is None:
         return out.reshape(B, S, n_heads * hd) @ p["wo"]
+    # group-wise projection + gate_mix: on the kernel path this also cuts
+    # wo gradients for p_o groups, matching the masked reference exactly.
     g_f, g_b = layer_gates
     G = g_f.shape[-1]
     c_g = _group_project(out, p["wo"], G)               # [B,S,G,D]
@@ -190,11 +209,12 @@ def _apply_rglru_inner(p, h, cfg: ModelConfig, layer_gates):
 
 
 def apply_block(p, x, kind: str, cfg: ModelConfig, layer_gates=None,
-                policy=None):
+                policy=None, use_kernel: bool = False):
     """Pre-norm residual block. Returns (x, aux_losses or None)."""
     h = apply_norm(p["norm1"], x, cfg.norm)
     if kind in (ATTN_GLOBAL, ATTN_LOCAL):
-        c = _apply_attn_inner(p["attn"], h, kind, cfg, layer_gates, policy)
+        c = _apply_attn_inner(p["attn"], h, kind, cfg, layer_gates, policy,
+                              use_kernel)
     elif kind == SSD:
         c = _apply_ssd_inner(p["ssd"], h, cfg, layer_gates)
     elif kind == RGLRU:
@@ -256,12 +276,15 @@ def init_model(key, cfg: ModelConfig):
 
 # ============================================================ model forward
 def forward(params, cfg: ModelConfig, tokens=None, features=None,
-            gates=None, policy=None, remat: bool = False):
+            gates=None, policy=None, remat: bool = False,
+            use_kernel: bool = False):
     """Returns (logits, aux) — logits [B, S, vocab].
 
     tokens: [B, S_text] int32 (None for pure-audio encoders)
     features: [B, T_f, frontend_dim] stub frontend embeddings (audio/vlm)
     gates: optional (g_f, g_b) of shape [n_layers, B, G]
+    use_kernel: route attention blocks through the Pallas gated flash
+        kernel (gate-aware custom VJP) instead of the masked dense path.
     """
     cdt = jnp.dtype(cfg.compute_dtype)
     parts = []
@@ -295,7 +318,8 @@ def forward(params, cfg: ModelConfig, tokens=None, features=None,
                 (blocks,) = xs
             for i in range(P):
                 lg = (gfc[i], gbc[i]) if gates is not None else None
-                x, a = apply_block(blocks[i], x, pat[i], cfg, lg, policy)
+                x, a = apply_block(blocks[i], x, pat[i], cfg, lg, policy,
+                                   use_kernel)
                 if a is not None:
                     aux = aux + a["load_balance"] + a["router_z"]
             return (x, aux), None
@@ -319,7 +343,8 @@ def forward(params, cfg: ModelConfig, tokens=None, features=None,
         lg = None
         if gates is not None:
             lg = (g_rest[0][i], g_rest[1][i])
-        x, a = apply_block(params["rest"][i], x, kind, cfg, lg, policy)
+        x, a = apply_block(params["rest"][i], x, kind, cfg, lg, policy,
+                           use_kernel)
         if a is not None:
             aux_sum = aux_sum + a["load_balance"] + a["router_z"]
 
@@ -483,10 +508,12 @@ fused_xent.defvjp(lambda logits, labels: _xent_fwd_impl(logits, labels),
 
 
 def lm_loss(params, cfg: ModelConfig, tokens, labels, features=None,
-            gates=None, policy=None, remat: bool = False):
+            gates=None, policy=None, remat: bool = False,
+            use_kernel: bool = False):
     """Next-token (or frame-classification) cross-entropy."""
     logits, aux = forward(params, cfg, tokens=tokens, features=features,
-                          gates=gates, policy=policy, remat=remat)
+                          gates=gates, policy=policy, remat=remat,
+                          use_kernel=use_kernel)
     if features is not None and tokens is not None:
         # VLM: loss only over the text region (labels align to text tokens)
         logits = logits[:, -labels.shape[1]:]

@@ -70,8 +70,11 @@ def patchify(images, patch: int):
     return x.reshape(B, ph * pw, patch * patch * C)
 
 
-def vit_forward(params, images, cfg: ViTConfig, gates=None):
-    """images: [B,H,W,3]; gates: optional (g_f, g_b) [n_layers, B, G].
+def vit_forward(params, images, cfg: ViTConfig, gates=None,
+                use_kernel: bool = False):
+    """images: [B,H,W,3]; gates: optional (g_f, g_b) [n_layers, B, G];
+    use_kernel routes attention through the Pallas gated flash kernel
+    (gate-aware backward) instead of the masked dense path.
 
     Returns logits [B, n_classes].
     """
@@ -83,13 +86,15 @@ def vit_forward(params, images, cfg: ViTConfig, gates=None):
         lg = None
         if gates is not None:
             lg = (gates[0][i], gates[1][i])
-        x, _ = apply_block(blk, x, ATTN_GLOBAL, bb, lg)
+        x, _ = apply_block(blk, x, ATTN_GLOBAL, bb, lg,
+                           use_kernel=use_kernel)
     x = apply_norm(params["final_norm"], x, "layer")
     return x[:, 0] @ params["head"]
 
 
-def vit_loss(params, images, labels, cfg: ViTConfig, gates=None):
-    logits = vit_forward(params, images, cfg, gates)
+def vit_loss(params, images, labels, cfg: ViTConfig, gates=None,
+             use_kernel: bool = False):
+    logits = vit_forward(params, images, cfg, gates, use_kernel=use_kernel)
     logp = jax.nn.log_softmax(logits.astype(jnp.float32))
     ll = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
     loss = -jnp.mean(ll)

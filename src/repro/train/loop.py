@@ -38,8 +38,14 @@ class TrainLog:
 # ------------------------------------------------------------------ LLM path
 def make_train_step(cfg: ModelConfig, opt: Optimizer, *, use_gates: bool,
                     packed: bool = False, policy=None, remat: bool = False,
-                    clip: float = 1.0):
-    """Returns jit-able step(params, opt_state, batch[, sched_args])."""
+                    clip: float = 1.0, use_kernel: bool = False):
+    """Returns jit-able step(params, opt_state, batch[, sched_args]).
+
+    use_kernel: run attention through the Pallas gated flash kernel whose
+    custom-VJP backward skips p_o / p_s (sample, head-group) slices.
+    Ignored on the packed path (packed gathers subnet micro-batches
+    instead of gating).
+    """
 
     def loss_of(params, batch, sched_args):
         if packed:
@@ -53,7 +59,7 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, *, use_gates: bool,
         gates = sched_args if use_gates else None
         return lm_loss(params, cfg, batch.get("tokens"), batch["labels"],
                        features=batch.get("features"), gates=gates,
-                       policy=policy, remat=remat)
+                       policy=policy, remat=remat, use_kernel=use_kernel)
 
     def step(params, opt_state, batch, sched_args=None):
         (loss, metrics), grads = jax.value_and_grad(
@@ -81,7 +87,8 @@ def plan_from_scores(cfg: ModelConfig, d2: D2FTConfig, params,
 
 def finetune(params, cfg: ModelConfig, d2: Optional[D2FTConfig],
              opt: Optimizer, batches: Iterable, *, steps: int,
-             packed: bool = False, log: Optional[TrainLog] = None) -> tuple:
+             packed: bool = False, use_kernel: bool = False,
+             log: Optional[TrainLog] = None) -> tuple:
     """Fine-tune; if d2 is given, schedule ops per batch via D2FT."""
     log = log or TrainLog()
     opt_state = opt.init(params)
@@ -99,7 +106,8 @@ def finetune(params, cfg: ModelConfig, d2: Optional[D2FTConfig],
                                       features=mb.get("features"))[0])
         if step_fn is None:
             step_fn = jax.jit(make_train_step(
-                cfg, opt, use_gates=d2 is not None, packed=packed))
+                cfg, opt, use_gates=d2 is not None, packed=packed,
+                use_kernel=use_kernel))
         sched_args = None
         if d2 is not None:
             B = batch["labels"].shape[0]
@@ -122,11 +130,12 @@ def finetune(params, cfg: ModelConfig, d2: Optional[D2FTConfig],
 
 # ------------------------------------------------------------------ ViT path
 def make_vit_step(cfg: ViTConfig, opt: Optimizer, use_gates: bool,
-                  clip: float = 1.0):
+                  clip: float = 1.0, use_kernel: bool = False):
     def step(params, opt_state, images, labels, gates=None):
         def loss_of(p):
             return vit_loss(p, images, labels, cfg,
-                            gates=gates if use_gates else None)
+                            gates=gates if use_gates else None,
+                            use_kernel=use_kernel)
         (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(params)
         grads, gnorm = clip_by_global_norm(grads, clip)
         params, opt_state = opt.update(grads, opt_state, params)
@@ -136,16 +145,20 @@ def make_vit_step(cfg: ViTConfig, opt: Optimizer, use_gates: bool,
 
 def finetune_vit(params, cfg: ViTConfig, opt: Optimizer, batches,
                  steps: int, schedule_fn: Optional[Callable] = None,
-                 n_microbatches: int = 5, log: Optional[TrainLog] = None):
+                 n_microbatches: int = 5, use_kernel: bool = False,
+                 log: Optional[TrainLog] = None):
     """schedule_fn(step_idx, params, images, labels) -> Schedule or None.
 
     The schedule is rematerialized whenever schedule_fn returns a new one
     (supports dynamic-pruning baselines that refresh every k iterations).
+    use_kernel routes attention through the Pallas gated flash kernel so
+    the Schedule's (g_f, g_b) gates drive the gate-aware backward kernels.
     """
     log = log or TrainLog()
     opt_state = opt.init(params)
     use_gates = schedule_fn is not None
-    step_fn = jax.jit(make_vit_step(cfg, opt, use_gates))
+    step_fn = jax.jit(make_vit_step(cfg, opt, use_gates,
+                                    use_kernel=use_kernel))
     sched = None
     for i, (images, labels) in enumerate(batches):
         if i >= steps:

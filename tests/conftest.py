@@ -6,3 +6,27 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def optional_hypothesis():
+    """(given, settings, st) — real hypothesis when installed, otherwise
+    stand-ins whose ``@given`` marks the test skipped. Property tests then
+    skip cleanly instead of erroring the whole suite at collection
+    (hypothesis is an optional extra, see requirements.txt)."""
+    try:
+        from hypothesis import given, settings, strategies as st
+        return given, settings, st
+    except ImportError:
+        import pytest
+
+        class _Strategies:
+            def __getattr__(self, name):
+                return lambda *a, **k: (lambda *a2, **k2: None)
+
+        def given(*a, **k):
+            return pytest.mark.skip(reason="hypothesis not installed")
+
+        def settings(*a, **k):
+            return lambda f: f
+
+        return given, settings, _Strategies()

@@ -2,7 +2,10 @@
 bi-level semantics (Eqs. 7/8), Algorithm 1 merge."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
 
 from repro.core.knapsack import (bilevel_select, brute_force, dp_knapsack,
                                  dp_knapsack_value_jax, scalarized_select)

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
 
 from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, RGLRU, SSD,
                                 ModelConfig, MoEConfig, RGLRUConfig,

@@ -93,8 +93,8 @@ SHARDED_PARITY = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.configs.base import ModelConfig, MoEConfig
+from repro.launch.mesh import compat_make_mesh
 from repro.models.transformer import init_model, lm_loss
 from repro.sharding.policy import ShardingPolicy
 
@@ -102,8 +102,7 @@ cfg = ModelConfig(name="t", arch_type="moe", n_layers=2, d_model=32,
                   n_heads=4, n_kv_heads=2, d_ff=0, vocab_size=64,
                   moe=MoEConfig(n_experts=4, top_k=2, d_ff=32,
                                 capacity_factor=4.0))
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = compat_make_mesh((4, 2), ("data", "model"))
 params = init_model(jax.random.PRNGKey(0), cfg)
 toks = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, 64)
 l0, _ = lm_loss(params, cfg, toks, toks)
@@ -125,7 +124,10 @@ def test_sharded_model_parity_subprocess():
     env = dict(os.environ,
                PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
                                        "src"))
-    env.pop("JAX_PLATFORMS", None)
+    # force CPU: xla_force_host_platform_device_count needs the host
+    # platform, and autodetect burns minutes in TPU init when libtpu is
+    # installed without hardware
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", SHARDED_PARITY], env=env,
                          capture_output=True, text=True, timeout=300)
     assert out.returncode == 0, out.stderr[-2000:]
@@ -136,15 +138,14 @@ LEVER_PARITY = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
 from repro.configs.base import ModelConfig
+from repro.launch.mesh import compat_make_mesh
 from repro.models.transformer import init_model, forward
 from repro.sharding.policy import ShardingPolicy
 
 cfg = ModelConfig(name="t", arch_type="dense", n_layers=2, d_model=32,
                   n_heads=5, n_kv_heads=5, d_ff=64, vocab_size=64)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = compat_make_mesh((2, 4), ("data", "model"))
 params = init_model(jax.random.PRNGKey(0), cfg)
 toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, 64)
 l0, _ = forward(params, cfg, tokens=toks)
@@ -169,7 +170,7 @@ def test_perf_lever_parity_subprocess():
     env = dict(os.environ,
                PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
                                        "src"))
-    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"       # see test_sharded_model_parity
     out = subprocess.run([sys.executable, "-c", LEVER_PARITY], env=env,
                          capture_output=True, text=True, timeout=300)
     assert out.returncode == 0, out.stderr[-2000:]
