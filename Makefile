@@ -2,16 +2,22 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-kernels bench quickstart
+.PHONY: test test-kernels bench bench-json quickstart
 
 test:
 	$(PY) -m pytest -x -q
 
 test-kernels:
-	$(PY) -m pytest -x -q tests/test_kernels.py tests/test_kernel_grads.py
+	$(PY) -m pytest -x -q tests/test_kernels.py tests/test_kernel_grads.py \
+		tests/test_compaction.py
 
 bench:
 	$(PY) -m benchmarks.run $(if $(ONLY),--only $(ONLY))
+
+# kernel-backward perf snapshot -> BENCH_kernel_backward.json (wall time,
+# executed-FLOP fraction, dispatched-bytes fraction per op mix)
+bench-json:
+	$(PY) -m benchmarks.run --only kernel_backward
 
 quickstart:
 	$(PY) examples/quickstart.py

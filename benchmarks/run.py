@@ -296,13 +296,24 @@ def bench_packed_flops():
 
 
 # ------------------------------------------- gated kernel backward savings
+BENCH_KERNEL_BACKWARD_JSON = "BENCH_kernel_backward.json"
+
+
 def bench_kernel_backward():
     """Kernel-path fwd+bwd vs the masked jnp reference across p_f/p_o/p_s
-    mixes: wall time per fwd+grad call, plus the executed-MXU-FLOP account
-    of the gate-aware kernels (static HLO FLOP counts cannot see runtime
+    mixes: wall time per fwd+grad call, the executed-MXU-FLOP account of
+    the gate-aware kernels (static HLO FLOP counts cannot see runtime
     ``@pl.when`` skips — the interpret-mode grid lowers to a loop whose body
-    XLA counts once; see docs/kernels.md)."""
-    from repro.kernels.d2ft_attention import gated_attention_flops
+    XLA counts once; see docs/kernels.md), and the dispatched-bytes
+    fraction of the compaction dispatch (live-slice grids, exact live
+    counts as bounds). Besides the CSV rows, writes machine-readable
+    ``BENCH_kernel_backward.json`` so the perf trajectory is tracked
+    across PRs (``make bench-json``)."""
+    import json
+
+    from repro.kernels.d2ft_attention import (
+        BWD_MATMULS_PER_TILE, gated_attention_dispatched_bytes,
+        gated_attention_flops)
     from repro.kernels.ops import gated_attention
     from repro.kernels.ref import gated_attention_ref
 
@@ -310,8 +321,9 @@ def bench_kernel_backward():
     ks = jax.random.split(jax.random.PRNGKey(0), 4)
     q, k, v, ct = (jax.random.normal(kk, (B, H, S, hd)) for kk in ks)
     rng = np.random.default_rng(0)
-    full_fwd, full_bwd = gated_attention_flops(
-        np.ones((B, H)), np.ones((B, H)), S, hd, causal=True)
+    ones = np.ones((B, H))
+    full_fwd, full_bwd = gated_attention_flops(ones, ones, S, hd, causal=True)
+    full_fb, full_bb = gated_attention_dispatched_bytes(ones, ones, S, hd)
 
     def timed(fn):
         jax.block_until_ready(fn(q, k, v))          # compile + warm
@@ -321,6 +333,7 @@ def bench_kernel_backward():
             jax.block_until_ready(fn(q, k, v))
         return (time.perf_counter() - t0) / n * 1e6
 
+    records = []
     # micro-batch mixes as (p_f, p_o, p_s) fractions of the (B, H) subnets
     for name, probs in [("pf5_po0_ps0", (1.0, 0.0, 0.0)),
                         ("pf3_po1_ps1", (0.6, 0.2, 0.2)),
@@ -328,10 +341,15 @@ def bench_kernel_backward():
         ops_ = rng.choice(3, size=(B, H), p=probs)
         g_f = jnp.asarray((ops_ != 2).astype(np.float32))
         g_b = jnp.asarray((ops_ == 0).astype(np.float32))
+        # exact live counts double as the static compaction bounds, so the
+        # benchmark measures the live-slice grids the train loop dispatches
+        live_f = max(1, int((ops_ != 2).sum()))
+        live_b = max(1, int((ops_ == 0).sum()))
 
         def loss_kernel(q, k, v):
             # interpret auto-detects: compiled on TPU, interpreter on CPU
-            out = gated_attention(q, k, v, g_f, g_b)
+            out = gated_attention(q, k, v, g_f, g_b, live_fwd=live_f,
+                                  live_bwd=live_b)
             return (out * ct).sum()
 
         def loss_ref(q, k, v):
@@ -343,11 +361,39 @@ def bench_kernel_backward():
         kern_us, ref_us = timed(kern), timed(refp)
         e_fwd, e_bwd = gated_attention_flops(np.asarray(g_f), np.asarray(g_b),
                                              S, hd, causal=True)
-        frac = (e_fwd + e_bwd) / (full_fwd + full_bwd)
+        d_fwd, d_bwd = gated_attention_dispatched_bytes(
+            np.asarray(g_f), np.asarray(g_b), S, hd, live_fwd=live_f,
+            live_bwd=live_b)
+        flop_frac = (e_fwd + e_bwd) / (full_fwd + full_bwd)
+        byte_frac = (d_fwd + d_bwd) / (full_fb + full_bb)
         emit(f"kernel_bwd_{name}", kern_us,
              f"ref_us={ref_us:.1f};executed_mxu_gflop={(e_fwd + e_bwd) / 1e9:.3f};"
              f"full_mxu_gflop={(full_fwd + full_bwd) / 1e9:.3f};"
-             f"executed_fraction={frac:.3f}")
+             f"executed_fraction={flop_frac:.3f};"
+             f"dispatched_bytes_fraction={byte_frac:.3f}")
+        records.append({
+            "mix": name,
+            "p_fractions": {"p_f": probs[0], "p_o": probs[1], "p_s": probs[2]},
+            "wall_us_per_call": kern_us,
+            "ref_wall_us_per_call": ref_us,
+            "dispatched_slices": {"fwd": live_f, "bwd": live_b, "total": B * H},
+            "executed_mxu_flops": e_fwd + e_bwd,
+            "full_mxu_flops": full_fwd + full_bwd,
+            "executed_flop_fraction": flop_frac,
+            "dispatched_bytes": {"fwd": d_fwd, "bwd": d_bwd},
+            "full_dispatched_bytes": {"fwd": full_fb, "bwd": full_bb},
+            "dispatched_bytes_fraction": byte_frac,
+        })
+    payload = {
+        "bench": "kernel_backward",
+        "shape": {"B": B, "H": H, "S": S, "head_dim": hd},
+        "backward_matmuls_per_tile": BWD_MATMULS_PER_TILE,
+        "backend": jax.default_backend(),
+        "mixes": records,
+    }
+    with open(BENCH_KERNEL_BACKWARD_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {BENCH_KERNEL_BACKWARD_JSON}", file=sys.stderr)
 
 
 BENCHES = {

@@ -78,6 +78,24 @@ def gates_from_schedule(sched: Schedule, mb_of_sample: np.ndarray
     return g_f, g_b
 
 
+def live_slice_bounds(sched: Schedule, mb_of_sample: np.ndarray
+                      ) -> Tuple[int, int]:
+    """Static (live_fwd, live_bwd) upper bounds for compaction dispatch.
+
+    Counts, per layer, the (sample, group) slices with g_f != 0 (op in
+    {p_f, p_o}) and with g_b != 0 (op == p_f) and takes the max over layers
+    — one static bound shared by every layer so scan/jit compile a single
+    kernel dispatch. The kernel consumes per-(sample, head) gates, so
+    multiply by heads-per-group (H // G) before passing to
+    ``ops.gated_attention`` (models do this). These are Python ints derived
+    from the host-side schedule table, never traced values.
+    """
+    per_sample = sched.layer_group_view()[:, :, mb_of_sample]   # [L, G, B]
+    live_f = int((per_sample != P_S).sum(axis=(1, 2)).max())
+    live_b = int((per_sample == P_F).sum(axis=(1, 2)).max())
+    return live_f, live_b
+
+
 def packed_indices(sched: Schedule, mb_of_sample: np.ndarray,
                    pad_to: Optional[int] = None
                    ) -> Tuple[np.ndarray, np.ndarray, int, int]:

@@ -6,13 +6,32 @@ On a GPU cluster the subnet's device simply idles; the TPU analogue is a
 flash-attention kernel family with per-(sample, head) gate operands:
 
 * forward kernel, gate ``g_f``: when ``g_f == 0`` the whole online-softmax
-  KV loop for that (batch, head) grid slice is skipped with ``@pl.when`` and
+  KV loop for that (batch, head) slice is skipped with ``@pl.when`` and
   zeros are written once, so the MXU never sees the block (p_s).
-* backward kernels (dq; dk/dv on the transposed grid), gate ``g_b``: when
-  ``g_b == 0`` every backward matmul for the slice is skipped the same way
-  and zero gradients are written once (p_o *and* p_s) — this is where the
-  paper's headline ~40% training-compute saving lives, since the backward
-  is ~60% of attention FLOPs.
+* fused backward kernel, gate ``g_b``: when ``g_b == 0`` every backward
+  matmul for the slice is skipped the same way and zero gradients are
+  written once (p_o *and* p_s) — this is where the paper's headline ~40%
+  training-compute saving lives, since the backward is ~60% of attention
+  FLOPs.
+
+Two dispatch-level optimisations make the *launched* work proportional to
+the *live* work instead of merely skipping the MXU:
+
+1. **Compaction dispatch** — the (B, H) axes are flattened into one slice
+   axis and, when the caller supplies a static live-count upper bound
+   (derived from the Schedule's p_f/p_o counts), the live slices are
+   gathered front via a stable argsort permutation computed from the gates.
+   The kernels then run on a grid whose leading dim is ``n_live`` instead of
+   ``B*H`` and the results are scattered back with zeros elsewhere — so
+   gated-off slices cost neither sequential grid steps nor HBM→VMEM DMA.
+2. **Fused one-pass backward** — a single kernel computes ``s`` and ``dp``
+   once per tile and emits dq, dk and dv together: 5 matmuls per live tile
+   instead of the 7 the previous split dq / transposed-grid dkv pair paid,
+   one launch instead of two, and one read of q/k/v/do/lse/delta instead of
+   two. dq is accumulated across kv steps in a per-slice output block whose
+   index map ignores the inner grid dims, so it stays resident in VMEM for
+   the whole slice (no recomputation, no input/output aliasing — which the
+   interpreter does not honour for read-back accumulation).
 
 Supports causal and sliding-window masks (the assigned archs' local
 -attention layers).
@@ -22,10 +41,10 @@ MXU-aligned (multiples of 128 for fp32/bf16 lanes). Forward scratch: the
 fp32 accumulator (block_q × head_dim) plus m/l online-softmax statistics in
 VMEM; the KV axis is the innermost (sequential) grid dim so scratch carries
 across kv steps. The forward additionally emits the logsumexp residual
-[B, H, S] consumed by the backward kernels (the paper-standard
-o/lse-residual flash backward — s and p are recomputed blockwise instead of
-materializing [S, S]). Fully-masked causal/window blocks are skipped with
-``@pl.when`` in every kernel.
+[B, H, S] consumed by the backward kernel (the paper-standard o/lse-residual
+flash backward — s and p are recomputed blockwise instead of materializing
+[S, S]). Fully-masked causal/window blocks are skipped with ``@pl.when`` in
+every kernel.
 
 ``gated_flash_attention`` is the differentiable custom-VJP entry point;
 ``d2ft_flash_attention`` remains the forward-only op. The jit'd public
@@ -35,6 +54,9 @@ wrapper with interpret auto-detection is ``repro.kernels.ops
 from __future__ import annotations
 
 import functools
+import math
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +70,7 @@ NEG_INF = -2.0 ** 30
 # exp(s - LSE_MASKED) underflows to exactly 0 in the backward for any score.
 LSE_MASKED = 2.0 ** 30
 
-# Test hook: when set to a callable, the backward kernels invoke it (via
+# Test hook: when set to a callable, the backward kernel invokes it (via
 # jax.debug.callback) once per *executed* compute block. Lets tests assert
 # that g_b == 0 slices do no backward matmul work — static HLO FLOP counts
 # cannot see the skip because interpret mode lowers the grid to a loop whose
@@ -57,10 +79,22 @@ LSE_MASKED = 2.0 ** 30
 # test (avoid pre-cached jits).
 on_backward_block = None
 
+# Test hook: when set to a callable, every pallas_call built by _forward /
+# _backward reports its dispatch as ``on_dispatch(kind, grid)`` with kind in
+# {"fwd", "bwd"} at TRACE time. Lets tests assert the compacted grid's
+# leading dim equals the live-slice bound instead of B*H. Same caveat as
+# on_backward_block: set it before the first trace (jit caches skip tracing).
+on_dispatch = None
+
 
 def _maybe_count_block():
     if on_backward_block is not None:
         jax.debug.callback(on_backward_block)
+
+
+def _report_dispatch(kind: str, grid):
+    if on_dispatch is not None:
+        on_dispatch(kind, tuple(grid))
 
 
 def _block_live(qpos0, kpos0, block_q: int, block_k: int, causal: bool,
@@ -87,12 +121,31 @@ def _tile_mask(qpos0, kpos0, block_q: int, block_k: int, seq_len: int,
     return mask
 
 
+# ==================================================== compaction dispatch
+def _dispatch_count(live, N: int) -> int:
+    """Static number of slices to launch: the live-count upper bound clamped
+    to [1, N]; None disables compaction (dispatch all N slices)."""
+    if live is None or live >= N:
+        return N
+    return max(1, int(live))
+
+
+def _live_permutation(gate_flat, n_dispatch: int):
+    """First ``n_dispatch`` entries of the stable permutation that sorts
+    live (gate != 0) slices to the front, preserving original order within
+    each class. jit-compatible: the *values* are traced, the *size* is the
+    static schedule-derived bound — any dead slices padding the tail carry
+    gate 0 and are skipped block-level inside the kernels."""
+    dead = (gate_flat == 0).astype(jnp.int32)
+    return jnp.argsort(dead, stable=True)[:n_dispatch]
+
+
 # ================================================================== forward
 def _fwd_kernel(gate_ref, q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref,
                 m_ref, l_ref, *, scale: float, causal: bool, window: int,
                 block_q: int, block_k: int, n_k: int, seq_len: int):
-    iq = pl.program_id(2)
-    ik = pl.program_id(3)
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
     gate = gate_ref[0, 0]
 
     @pl.when(ik == 0)
@@ -110,9 +163,9 @@ def _fwd_kernel(gate_ref, q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref,
 
     @pl.when(run)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)            # [bq, hd]
-        k = k_ref[0, 0].astype(jnp.float32)            # [bk, hd]
-        v = v_ref[0, 0].astype(jnp.float32)
+        q = q_ref[0].astype(jnp.float32)               # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)               # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)
         s = jax.lax.dot_general(q * scale, k,
                                 (((1,), (1,)), ((), ())))   # [bq, bk]
         mask = _tile_mask(qpos0, kpos0, block_q, block_k, seq_len, causal,
@@ -134,15 +187,17 @@ def _fwd_kernel(gate_ref, q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref,
         out = acc_ref[...] / safe[:, None]
         out = jnp.where((l > 0)[:, None], out, 0.0)
         out = out * gate.astype(jnp.float32)
-        o_ref[0, 0] = out.astype(o_ref.dtype)
-        lse_ref[0, 0] = jnp.where(l > 0, m_ref[...] + jnp.log(safe),
-                                  LSE_MASKED)
+        o_ref[0] = out.astype(o_ref.dtype)
+        lse_ref[0] = jnp.where(l > 0, m_ref[...] + jnp.log(safe),
+                               LSE_MASKED)
 
 
 def _forward(q, k, v, g_f, *, causal: bool, window: int, block_q: int,
-             block_k: int, interpret: bool, seq_len: int = 0):
+             block_k: int, interpret: bool, seq_len: int = 0,
+             live: int = None):
     """Returns (o [B,H,S,hd], lse [B,H,S] f32). seq_len is the true length
-    when the arrays carry tile padding (0 means unpadded)."""
+    when the arrays carry tile padding (0 means unpadded). ``live`` is the
+    static live-slice upper bound enabling compaction dispatch."""
     B, H, S, hd = q.shape
     assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
     seq_len = seq_len or S
@@ -150,27 +205,37 @@ def _forward(q, k, v, g_f, *, causal: bool, window: int, block_q: int,
     n_k = S // block_k
     scale = 1.0 / (hd ** 0.5)
 
+    N = B * H
+    q, k, v = (a.reshape(N, S, hd) for a in (q, k, v))
+    g = g_f.reshape(N)
+    n_disp = _dispatch_count(live, N)
+    idx = None
+    if n_disp < N:
+        idx = _live_permutation(g, n_disp)
+        q, k, v, g = (jnp.take(a, idx, axis=0) for a in (q, k, v, g))
+
     kernel = functools.partial(
         _fwd_kernel, scale=scale, causal=causal, window=window,
         block_q=block_q, block_k=block_k, n_k=n_k, seq_len=seq_len)
 
-    return pl.pallas_call(
+    grid = (n_disp, n_q, n_k)
+    _report_dispatch("fwd", grid)
+    o, lse = pl.pallas_call(
         kernel,
-        grid=(B, H, n_q, n_k),
+        grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1), lambda b, h, iq, ik: (b, h)),          # g_f
-            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, iq, ik: (b, h, ik, 0)),
-            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1), lambda s, iq, ik: (s, 0)),            # g_f
+            pl.BlockSpec((1, block_q, hd), lambda s, iq, ik: (s, iq, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda s, iq, ik: (s, ik, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda s, iq, ik: (s, ik, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, block_q, hd),
-                         lambda b, h, iq, ik: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
+            pl.BlockSpec((1, block_q, hd), lambda s, iq, ik: (s, iq, 0)),
+            pl.BlockSpec((1, block_q), lambda s, iq, ik: (s, iq)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
-            jax.ShapeDtypeStruct((B, H, S), jnp.float32),
+            jax.ShapeDtypeStruct((n_disp, S, hd), q.dtype),
+            jax.ShapeDtypeStruct((n_disp, S), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((block_q, hd), jnp.float32),   # acc
@@ -178,86 +243,70 @@ def _forward(q, k, v, g_f, *, causal: bool, window: int, block_q: int,
             pltpu.VMEM((block_q,), jnp.float32),      # l
         ],
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary")),
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(g_f, q, k, v)
+    )(g.reshape(n_disp, 1), q, k, v)
+
+    if idx is not None:
+        # scatter live results back; dead (never-dispatched) slices are the
+        # zero-fill, dispatched-but-gated-off padding slices wrote zeros /
+        # LSE_MASKED themselves so the set() is a no-op value-wise.
+        o = jnp.zeros((N, S, hd), o.dtype).at[idx].set(
+            o, unique_indices=True)
+        lse = jnp.full((N, S), LSE_MASKED, jnp.float32).at[idx].set(
+            lse, unique_indices=True)
+    return o.reshape(B, H, S, hd), lse.reshape(B, H, S)
 
 
 def d2ft_flash_attention(q, k, v, gates, *, causal: bool = True,
                          window: int = 0, block_q: int = 128,
-                         block_k: int = 128, interpret: bool = False):
+                         block_k: int = 128, interpret: bool = False,
+                         live: int = None):
     """Forward-only gated flash attention (no VJP registered).
 
     q, k, v: [B, H, S, hd] (kv heads already expanded to H);
-    gates: [B, H] float {0,1}. Returns [B, H, S, hd]. For the
-    differentiable path use ``gated_flash_attention`` / ``ops.gated_attention``.
+    gates: [B, H] float {0,1}. Returns [B, H, S, hd]. Sequence lengths that
+    don't divide the tiles go through the same ``select_blocks`` shrink-or
+    -pad wrapper as ``ops.gated_attention`` (padded rows are masked via the
+    kernel's seq_len bound and sliced off). ``live`` optionally enables
+    compaction dispatch with a static live-slice upper bound. For the
+    differentiable path use ``gated_flash_attention`` / ``ops
+    .gated_attention``.
     """
-    B, H, S, hd = q.shape
-    block_q = min(block_q, S)
-    block_k = min(block_k, S)
-    return _forward(q, k, v, gates, causal=causal, window=window,
-                    block_q=block_q, block_k=block_k, interpret=interpret)[0]
+    q, k, v, bq, bk, S, Sp = pad_to_blocks(q, k, v, block_q, block_k)
+    out = _forward(q, k, v, gates, causal=causal, window=window,
+                   block_q=bq, block_k=bk, interpret=interpret,
+                   seq_len=S, live=live)[0]
+    return out[:, :, :S] if Sp != S else out
 
 
 # ================================================================= backward
-def _bwd_dq_kernel(gate_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
-                   dq_ref, acc_ref, *, scale: float, causal: bool,
-                   window: int, block_q: int, block_k: int, n_k: int,
-                   seq_len: int):
-    """dq, grid (B, H, n_q, n_k) — kv innermost so the dq tile accumulates
-    in VMEM scratch. ``g_b == 0`` skips every matmul; zeros written once."""
+def _bwd_fused_kernel(gate_ref, q_ref, k_ref, v_ref, do_ref, lse_ref,
+                      delta_ref, dq_ref, dk_ref, dv_ref, dk_acc, dv_acc, *,
+                      scale: float, causal: bool, window: int, block_q: int,
+                      block_k: int, n_q: int, seq_len: int):
+    """Fused one-pass backward, grid (n_slices, n_k, n_q) — q innermost.
+
+    Per live tile: 5 matmuls (``s``, ``p^T·do``, ``do·v^T``, ``ds·k``,
+    ``ds^T·q``); ``s`` and ``dp`` are computed once and shared between the
+    dq and dk paths (the split-kernel design recomputed them, 3 + 4 = 7).
+    dk/dv accumulate in VMEM scratch while the kv tile stays resident and
+    flush at the end of each q sweep. dq accumulates *in the output block
+    itself*: its index map ignores (ik, iq), so the whole [S, hd] per-slice
+    dq tile stays resident in VMEM across the slice's grid steps and is
+    flushed to HBM exactly once — cross-step accumulation without
+    recomputation or input/output aliasing. ``g_b == 0`` skips every matmul;
+    zeros are written once per slice."""
+    ik = pl.program_id(1)
     iq = pl.program_id(2)
-    ik = pl.program_id(3)
     gate = gate_ref[0, 0]
 
-    @pl.when(ik == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    qpos0 = iq * block_q
-    kpos0 = ik * block_k
-    run = jnp.logical_and(
-        gate != 0, _block_live(qpos0, kpos0, block_q, block_k, causal,
-                               window, seq_len))
-
-    @pl.when(run)
-    def _compute():
-        _maybe_count_block()
-        q = q_ref[0, 0].astype(jnp.float32)            # [bq, hd]
-        k = k_ref[0, 0].astype(jnp.float32)            # [bk, hd]
-        v = v_ref[0, 0].astype(jnp.float32)
-        do = do_ref[0, 0].astype(jnp.float32)          # [bq, hd]
-        lse = lse_ref[0, 0]                            # [bq]
-        delta = delta_ref[0, 0]                        # [bq]
-        s = jax.lax.dot_general(q * scale, k,
-                                (((1,), (1,)), ((), ())))   # [bq, bk]
-        mask = _tile_mask(qpos0, kpos0, block_q, block_k, seq_len, causal,
-                          window)
-        s = jnp.where(mask, s, NEG_INF)
-        p = jnp.exp(s - lse[:, None])                  # [bq, bk]
-        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
-        ds = p * (dp - delta[:, None])
-        acc_ref[...] += jax.lax.dot_general(
-            ds, k, (((1,), (0,)), ((), ()))) * scale
-
-    @pl.when(ik == n_k - 1)
-    def _finalize():
-        dq_ref[0, 0] = acc_ref[...].astype(dq_ref.dtype)
-
-
-def _bwd_dkv_kernel(gate_ref, q_ref, k_ref, v_ref, do_ref, lse_ref,
-                    delta_ref, dk_ref, dv_ref, dk_acc, dv_acc, *,
-                    scale: float, causal: bool, window: int, block_q: int,
-                    block_k: int, n_q: int, seq_len: int):
-    """dk/dv, transposed grid (B, H, n_k, n_q) — q innermost so the dk/dv
-    tiles accumulate in VMEM scratch while the kv tile stays resident."""
-    ik = pl.program_id(2)
-    iq = pl.program_id(3)
-    gate = gate_ref[0, 0]
+    @pl.when(jnp.logical_and(ik == 0, iq == 0))
+    def _init_dq():
+        dq_ref[...] = jnp.zeros_like(dq_ref)
 
     @pl.when(iq == 0)
-    def _init():
+    def _init_kv():
         dk_acc[...] = jnp.zeros_like(dk_acc)
         dv_acc[...] = jnp.zeros_like(dv_acc)
 
@@ -270,12 +319,12 @@ def _bwd_dkv_kernel(gate_ref, q_ref, k_ref, v_ref, do_ref, lse_ref,
     @pl.when(run)
     def _compute():
         _maybe_count_block()
-        q = q_ref[0, 0].astype(jnp.float32)            # [bq, hd]
-        k = k_ref[0, 0].astype(jnp.float32)            # [bk, hd]
-        v = v_ref[0, 0].astype(jnp.float32)
-        do = do_ref[0, 0].astype(jnp.float32)          # [bq, hd]
-        lse = lse_ref[0, 0]
-        delta = delta_ref[0, 0]
+        q = q_ref[0].astype(jnp.float32)               # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)               # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)
+        do = do_ref[0].astype(jnp.float32)             # [bq, hd]
+        lse = lse_ref[0]                               # [bq]
+        delta = delta_ref[0]                           # [bq]
         s = jax.lax.dot_general(q * scale, k,
                                 (((1,), (1,)), ((), ())))   # [bq, bk]
         mask = _tile_mask(qpos0, kpos0, block_q, block_k, seq_len, causal,
@@ -285,88 +334,92 @@ def _bwd_dkv_kernel(gate_ref, q_ref, k_ref, v_ref, do_ref, lse_ref,
         dv_acc[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())))
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
         ds = p * (dp - delta[:, None])                 # [bq, bk]
+        dq_ref[0, pl.dslice(qpos0, block_q), :] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ()))) * scale
         dk_acc[...] += jax.lax.dot_general(
             ds, q, (((0,), (0,)), ((), ()))) * scale
 
     @pl.when(iq == n_q - 1)
-    def _finalize():
-        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
-        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+    def _flush():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
 
 
 def _backward(q, k, v, g_b, o, lse, do, *, causal: bool, window: int,
-              block_q: int, block_k: int, interpret: bool, seq_len: int = 0):
+              block_q: int, block_k: int, interpret: bool, seq_len: int = 0,
+              live: int = None):
     B, H, S, hd = q.shape
     seq_len = seq_len or S
     n_q = S // block_q
     n_k = S // block_k
     scale = 1.0 / (hd ** 0.5)
+
+    N = B * H
+    q, k, v, o, do = (a.reshape(N, S, hd) for a in (q, k, v, o, do))
+    lse = lse.reshape(N, S)
+    g = g_b.reshape(N)
+    n_disp = _dispatch_count(live, N)
+    idx = None
+    if n_disp < N:
+        idx = _live_permutation(g, n_disp)
+        q, k, v, o, do = (jnp.take(a, idx, axis=0)
+                          for a in (q, k, v, o, do))
+        lse, g = jnp.take(lse, idx, axis=0), jnp.take(g, idx, axis=0)
     # delta_i = sum_d dO_id * O_id — cheap elementwise reduce, done outside
-    # the kernels (standard flash-bwd preprocessing).
+    # the kernel (standard flash-bwd preprocessing) on the *compacted*
+    # operands so gated-off slices don't pay it either.
     delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
 
-    gate_spec = pl.BlockSpec((1, 1), lambda b, h, i, j: (b, h))
-    params = _CompilerParams(
-        dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"))
-
-    dq = pl.pallas_call(
-        functools.partial(_bwd_dq_kernel, scale=scale, causal=causal,
-                          window=window, block_q=block_q, block_k=block_k,
-                          n_k=n_k, seq_len=seq_len),
-        grid=(B, H, n_q, n_k),
-        in_specs=[
-            gate_spec,                                                  # g_b
-            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, iq, ik: (b, h, ik, 0)),
-            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, iq, ik: (b, h, ik, 0)),
-            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
-            pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, block_q, hd),
-                               lambda b, h, iq, ik: (b, h, iq, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
-        scratch_shapes=[pltpu.VMEM((block_q, hd), jnp.float32)],
-        compiler_params=params,
-        interpret=interpret,
-    )(g_b, q, k, v, do, lse, delta)
-
-    dk, dv = pl.pallas_call(
-        functools.partial(_bwd_dkv_kernel, scale=scale, causal=causal,
+    grid = (n_disp, n_k, n_q)
+    _report_dispatch("bwd", grid)
+    dq, dk, dv = pl.pallas_call(
+        functools.partial(_bwd_fused_kernel, scale=scale, causal=causal,
                           window=window, block_q=block_q, block_k=block_k,
                           n_q=n_q, seq_len=seq_len),
-        grid=(B, H, n_k, n_q),
+        grid=grid,
         in_specs=[
-            gate_spec,                                                  # g_b
-            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, ik, iq: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ik, iq: (b, h, ik, 0)),
-            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ik, iq: (b, h, ik, 0)),
-            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, ik, iq: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, block_q), lambda b, h, ik, iq: (b, h, iq)),
-            pl.BlockSpec((1, 1, block_q), lambda b, h, ik, iq: (b, h, iq)),
+            pl.BlockSpec((1, 1), lambda s, ik, iq: (s, 0)),            # g_b
+            pl.BlockSpec((1, block_q, hd), lambda s, ik, iq: (s, iq, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda s, ik, iq: (s, ik, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda s, ik, iq: (s, ik, 0)),
+            pl.BlockSpec((1, block_q, hd), lambda s, ik, iq: (s, iq, 0)),
+            pl.BlockSpec((1, block_q), lambda s, ik, iq: (s, iq)),
+            pl.BlockSpec((1, block_q), lambda s, ik, iq: (s, iq)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, block_k, hd),
-                         lambda b, h, ik, iq: (b, h, ik, 0)),
-            pl.BlockSpec((1, 1, block_k, hd),
-                         lambda b, h, ik, iq: (b, h, ik, 0)),
+            # dq: per-slice block, VMEM-resident across the whole slice —
+            # S*hd*4 bytes of VMEM on real TPU (interpret mode is unbounded;
+            # ~16MB/core caps S around 16-32k at hd=128: docs/kernels.md)
+            pl.BlockSpec((1, S, hd), lambda s, ik, iq: (s, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda s, ik, iq: (s, ik, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda s, ik, iq: (s, ik, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((B, H, S, hd), k.dtype),
-            jax.ShapeDtypeStruct((B, H, S, hd), v.dtype),
+            jax.ShapeDtypeStruct((n_disp, S, hd), jnp.float32),
+            jax.ShapeDtypeStruct((n_disp, S, hd), k.dtype),
+            jax.ShapeDtypeStruct((n_disp, S, hd), v.dtype),
         ],
         scratch_shapes=[pltpu.VMEM((block_k, hd), jnp.float32),
                         pltpu.VMEM((block_k, hd), jnp.float32)],
-        compiler_params=params,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
-    )(g_b, q, k, v, do, lse, delta)
-    return dq, dk, dv
+    )(g.reshape(n_disp, 1), q, k, v, do, lse, delta)
+
+    dq = dq.astype(q.dtype)
+    if idx is not None:
+        dq, dk, dv = (jnp.zeros((N, S, hd), a.dtype).at[idx].set(
+            a, unique_indices=True) for a in (dq, dk, dv))
+    return (dq.reshape(B, H, S, hd), dk.reshape(B, H, S, hd),
+            dv.reshape(B, H, S, hd))
 
 
 # =============================================================== custom VJP
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10, 11,
+                                                    12))
 def gated_flash_attention(q, k, v, g_f, g_b, causal, window, block_q,
-                          block_k, interpret, seq_len=0):
+                          block_k, interpret, seq_len=0, live_fwd=None,
+                          live_bwd=None):
     """Differentiable gated flash attention core.
 
     Forward output is ``g_f``-gated (p_s heads produce zeros, MXU skipped);
@@ -374,28 +427,34 @@ def gated_flash_attention(q, k, v, g_f, g_b, causal, window, block_q,
     ``g_b != 0`` — p_o / p_s slices skip every backward matmul via
     ``@pl.when`` and write zeros once. Gates receive zero cotangents (they
     are schedule constants). seq_len is the true length when the operands
-    carry tile padding (0 = unpadded). Prefer the jit'd
-    ``ops.gated_attention``, which also picks tile sizes and padding.
+    carry tile padding (0 = unpadded). ``live_fwd`` / ``live_bwd`` are
+    static upper bounds on the number of g_f != 0 / g_b != 0 slices: when
+    given, the kernels dispatch a compacted grid of that many slices instead
+    of B*H (gather live front / scatter back — see the module docstring);
+    None dispatches everything. Prefer the jit'd ``ops.gated_attention``,
+    which also picks tile sizes and padding.
     """
     o, _ = _forward(q, k, v, g_f, causal=causal, window=window,
                     block_q=block_q, block_k=block_k, interpret=interpret,
-                    seq_len=seq_len)
+                    seq_len=seq_len, live=live_fwd)
     return o
 
 
 def _vjp_fwd(q, k, v, g_f, g_b, causal, window, block_q, block_k, interpret,
-             seq_len=0):
+             seq_len=0, live_fwd=None, live_bwd=None):
     o, lse = _forward(q, k, v, g_f, causal=causal, window=window,
                       block_q=block_q, block_k=block_k, interpret=interpret,
-                      seq_len=seq_len)
+                      seq_len=seq_len, live=live_fwd)
     return o, (q, k, v, g_f, g_b, o, lse)
 
 
-def _vjp_bwd(causal, window, block_q, block_k, interpret, seq_len, res, do):
+def _vjp_bwd(causal, window, block_q, block_k, interpret, seq_len, live_fwd,
+             live_bwd, res, do):
     q, k, v, g_f, g_b, o, lse = res
     dq, dk, dv = _backward(q, k, v, g_b, o, lse, do, causal=causal,
                            window=window, block_q=block_q, block_k=block_k,
-                           interpret=interpret, seq_len=seq_len)
+                           interpret=interpret, seq_len=seq_len,
+                           live=live_bwd)
     return dq, dk, dv, jnp.zeros_like(g_f), jnp.zeros_like(g_b)
 
 
@@ -411,15 +470,15 @@ def _largest_divisor(S: int, block: int) -> int:
 
 
 def select_blocks(S: int, block_q: int, block_k: int):
-    """(block_q, block_k, padded_S) used by ``ops.gated_attention`` AND the
-    FLOP accounting below — one source of truth for tile geometry.
+    """(block_q, block_k, padded_S) used by ``ops.gated_attention``,
+    ``d2ft_flash_attention`` AND the FLOP/DMA accounting below — one source
+    of truth for tile geometry.
 
     Exact fit when S divides the requested tiles; otherwise shrink to a
     divisor if one exists within 2x of the request (stays near MXU width);
     otherwise keep the requested tiles and pad S up to a common multiple —
     never degenerate slivers (e.g. S=257 pads to 384 with 128-tiles instead
     of running 1-wide tiles the TPU lowering would reject)."""
-    import math
     bq = min(block_q, S)
     bk = min(block_k, S)
     if S % bq == 0 and S % bk == 0:
@@ -430,6 +489,23 @@ def select_blocks(S: int, block_q: int, block_k: int):
         return dq_, dk_, S
     m = math.lcm(bq, bk)
     return bq, bk, -(-S // m) * m
+
+
+def pad_to_blocks(q, k, v, block_q: int, block_k: int):
+    """Shared select_blocks + zero-pad step for every kernel entry point
+    (``ops.gated_attention`` and the forward-only ``d2ft_flash_attention``).
+
+    Returns (q, k, v, bq, bk, S, Sp): operands padded along the sequence
+    axis to Sp when S doesn't divide the chosen tiles (padded rows are
+    masked inside the kernels via their seq_len bound; callers slice
+    outputs back to S, and jnp.pad's VJP keeps the padding out of the
+    gradients)."""
+    S = q.shape[2]
+    bq, bk, Sp = select_blocks(S, block_q, block_k)
+    if Sp != S:
+        pad = ((0, 0), (0, 0), (0, Sp - S), (0, 0))
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    return q, k, v, bq, bk, S, Sp
 
 
 # ======================================================== analytic accounting
@@ -446,6 +522,10 @@ def live_block_count(S: int, block_q: int, block_k: int, causal: bool,
         for iq in range(n_q) for ik in range(n_k))
 
 
+FWD_MATMULS_PER_TILE = 2   # qk^T, pv
+BWD_MATMULS_PER_TILE = 5   # s, p^T·do, do·v^T, ds·k, ds^T·q (fused one-pass)
+
+
 def gated_attention_flops(g_f, g_b, S: int, hd: int, *, causal: bool = True,
                           window: int = 0, block_q: int = 128,
                           block_k: int = 128):
@@ -453,17 +533,57 @@ def gated_attention_flops(g_f, g_b, S: int, hd: int, *, causal: bool = True,
 
     Uses the same tile geometry as ``ops.gated_attention`` (select_blocks,
     including padding) and the same block-granular skip predicate: 2 matmuls
-    per live tile forward (qk^T, pv); 7 backward — the split dq / dkv
-    kernels each recompute s and dp (3 + 4) in exchange for no cross-tile
-    output revisits. Each matmul is 2·bq·bk·hd FLOPs. Static HLO FLOP
-    counts can't report this (interpret mode lowers the grid to a loop
-    whose body is counted once), hence this mirror of the kernel's own
-    skip logic.
+    per live tile forward (qk^T, pv); 5 backward — the fused one-pass kernel
+    computes ``s`` and ``dp`` once per tile and emits dq/dk/dv together
+    (the former split dq / dkv kernels paid 3 + 4 = 7, recomputing both).
+    Each matmul is 2·bq·bk·hd FLOPs. Static HLO FLOP counts can't report
+    this (interpret mode lowers the grid to a loop whose body XLA counts
+    once), hence this mirror of the kernel's own skip logic.
     """
-    import numpy as np
     bq, bk, Sp = select_blocks(S, block_q, block_k)
     tiles = live_block_count(Sp, bq, bk, causal, window, seq_len=S)
     per_matmul = 2 * bq * bk * hd
-    fwd = float(np.sum(np.asarray(g_f) != 0)) * tiles * 2 * per_matmul
-    bwd = float(np.sum(np.asarray(g_b) != 0)) * tiles * 7 * per_matmul
+    fwd = float(np.sum(np.asarray(g_f) != 0)) \
+        * tiles * FWD_MATMULS_PER_TILE * per_matmul
+    bwd = float(np.sum(np.asarray(g_b) != 0)) \
+        * tiles * BWD_MATMULS_PER_TILE * per_matmul
     return fwd, bwd
+
+
+def gated_attention_dispatched_bytes(g_f, g_b, S: int, hd: int, *,
+                                     causal: bool = True, window: int = 0,
+                                     block_q: int = 128, block_k: int = 128,
+                                     live_fwd: int = None,
+                                     live_bwd: int = None,
+                                     itemsize: int = 4):
+    """(fwd_bytes, bwd_bytes) the BlockSpec pipelines stream HBM<->VMEM for
+    one fwd / one bwd ``pallas_call`` under the given dispatch.
+
+    Mirrors the kernels' grids and index maps: a block is (re)fetched only
+    when its index-map output changes between consecutive grid steps, so per
+    dispatched slice the forward streams q once per q-tile, k/v once per
+    (iq, ik) step and writes o/lse once; the fused backward keeps k/v
+    resident per kv sweep, streams q/do/lse/delta once per (ik, iq) step,
+    writes dk/dv once per kv tile and the VMEM-resident dq block exactly
+    once. The ``@pl.when`` gate/mask skip does NOT skip this traffic — only
+    compaction dispatch does: without ``live_fwd``/``live_bwd`` every one of
+    the B*H slices is streamed; with bounds, only the compacted grid's
+    slices are. Gate scalars and the jnp-level gather/scatter/pad copies are
+    not modelled (they are O(live) and fuse outside the kernels).
+    """
+    bq, bk, Sp = select_blocks(S, block_q, block_k)
+    n_q, n_k = Sp // bq, Sp // bk
+    N = int(np.asarray(g_f).size)
+    assert int(np.asarray(g_b).size) == N
+    disp_f = _dispatch_count(live_fwd, N)
+    disp_b = _dispatch_count(live_bwd, N)
+    fwd_slice = (n_q * bq * hd                 # q: fetched once per q tile
+                 + 2 * n_q * n_k * bk * hd    # k, v: refetched per (iq, ik)
+                 + n_q * bq * hd              # o written once per q tile
+                 + n_q * bq)                  # lse
+    bwd_slice = (2 * n_k * bk * hd            # k, v: resident per kv sweep
+                 + 2 * n_k * n_q * bq * hd    # q, do: refetched per (ik, iq)
+                 + 2 * n_k * n_q * bq         # lse, delta
+                 + Sp * hd                    # dq block: written once/slice
+                 + 2 * n_k * bk * hd)         # dk, dv: written once per tile
+    return disp_f * fwd_slice * itemsize, disp_b * bwd_slice * itemsize

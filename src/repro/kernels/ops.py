@@ -8,12 +8,14 @@ from __future__ import annotations
 import functools
 from typing import Optional
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.d2ft_attention import (d2ft_flash_attention,
                                           gated_flash_attention,
-                                          select_blocks)
+                                          pad_to_blocks)
 from repro.kernels.lora_matmul import lora_matmul
 from repro.kernels import ref
 
@@ -24,18 +26,85 @@ def _auto_interpret(interpret: Optional[bool]) -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _concrete(x):
+    """np array when x is a concrete value, None when it is a tracer."""
+    try:
+        return np.asarray(x)
+    except (jax.errors.ConcretizationTypeError,
+            jax.errors.TracerArrayConversionError):
+        return None
+
+
+def _validate_gates(g_f, g_b, B: int, H: int, live_fwd, live_bwd):
+    """Shape check always; two value contracts are checked whenever the
+    gates are concrete — i.e. at every direct call; inside an outer jit the
+    gates are tracers and the checks are skipped (the schedule construction
+    upholds them):
+
+    * the documented ``g_b <= g_f`` invariant (a p_s head cannot run its
+      backward);
+    * ``live_fwd``/``live_bwd`` being true *upper* bounds on the live gate
+      counts — an undersized bound would silently truncate the compaction
+      gather and zero live slices' outputs/gradients (the classic mistake
+      is passing per-(sample, group) schedule bounds without the
+      heads-per-group scaling the model stack applies).
+    """
+    if g_f.shape != (B, H) or g_b.shape != (B, H):
+        raise ValueError(
+            f"gates must be [B={B}, H={H}], got {g_f.shape} / {g_b.shape}")
+    cf, cb = _concrete(g_f), _concrete(g_b)
+    if cf is None or cb is None:
+        return
+    if np.any(cb > cf):
+        bad = np.argwhere(cb > cf)
+        raise ValueError(
+            "g_b <= g_f violated (a gated-off forward cannot have a live "
+            f"backward): g_b > g_f at (sample, head) {bad[:8].tolist()}"
+            f"{' ...' if len(bad) > 8 else ''}")
+    for name, bound, live in (("live_fwd", live_fwd, int((cf != 0).sum())),
+                              ("live_bwd", live_bwd, int((cb != 0).sum()))):
+        if bound is not None and bound < live:
+            raise ValueError(
+                f"{name}={bound} is below the live gate count {live}: the "
+                "compaction bound must be an upper bound or live slices "
+                "would be silently dropped (did you forget the H//G "
+                "heads-per-group scaling?)")
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
-                                             "block_k", "interpret"))
+                                             "block_k", "interpret",
+                                             "live_fwd", "live_bwd"))
+def _gated_attention_impl(q, k, v, g_f, g_b, *, causal, window, block_q,
+                          block_k, interpret, live_fwd, live_bwd):
+    q, k, v, bq, bk, S, Sp = pad_to_blocks(q, k, v, block_q, block_k)
+    out = gated_flash_attention(q, k, v, g_f, g_b, causal, window, bq, bk,
+                                _auto_interpret(interpret), S, live_fwd,
+                                live_bwd)
+    return out[:, :, :S] if Sp != S else out
+
+
 def gated_attention(q, k, v, g_f, g_b=None, *, causal: bool = True,
                     window: int = 0, block_q: int = 128, block_k: int = 128,
-                    interpret: Optional[bool] = None):
+                    interpret: Optional[bool] = None,
+                    live_fwd: Optional[int] = None,
+                    live_bwd: Optional[int] = None):
     """D2FT-gated flash attention with a gate-aware backward (custom VJP).
 
-    q, k, v: [B, H, S, hd]; g_f, g_b: [B, H] float {0,1} with g_b <= g_f.
-    g_f gates the forward (0 -> zeros and no forward MXU work: p_s); g_b
-    gates the backward kernels (0 -> zero dq/dk/dv and no backward MXU
-    work: p_o and p_s). Omitting g_b uses g_b = g_f, i.e. the fully
-    differentiable p_f path (back-compat with the forward-only API).
+    q, k, v: [B, H, S, hd]; g_f, g_b: [B, H] float {0,1} with g_b <= g_f
+    elementwise (checked whenever the gates are concrete). g_f gates the
+    forward (0 -> zeros and no forward MXU work: p_s); g_b gates the
+    backward kernel (0 -> zero dq/dk/dv and no backward MXU work: p_o and
+    p_s). Omitting g_b uses g_b = g_f, i.e. the fully differentiable p_f
+    path (back-compat with the forward-only API).
+
+    live_fwd / live_bwd: optional *static* upper bounds on the number of
+    g_f != 0 / g_b != 0 (sample, head) slices — e.g. B*H scaled by the
+    Schedule's p_f/p_o micro-batch counts (``core.schedule
+    .live_slice_bounds``). When given, the kernels run on a compacted grid
+    of that many slices (live slices gathered front via a stable argsort of
+    the gates, results scattered back with zeros elsewhere) so gated-off
+    slices pay neither grid steps nor DMA. Bounds must be >= the actual
+    live counts for the gates passed; None dispatches all B*H slices.
 
     Sequence lengths that don't divide the tiles either shrink the tiles
     (near-divisor case) or zero-pad S (select_blocks); padded rows/tiles
@@ -45,15 +114,11 @@ def gated_attention(q, k, v, g_f, g_b=None, *, causal: bool = True,
     if g_b is None:
         g_b = g_f
     B, H, S, _ = q.shape
-    assert g_f.shape == (B, H) and g_b.shape == (B, H), \
-        f"gates must be [B={B}, H={H}], got {g_f.shape} / {g_b.shape}"
-    bq, bk, Sp = select_blocks(S, block_q, block_k)
-    if Sp != S:
-        pad = ((0, 0), (0, 0), (0, Sp - S), (0, 0))
-        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
-    out = gated_flash_attention(q, k, v, g_f, g_b, causal, window, bq, bk,
-                                _auto_interpret(interpret), S)
-    return out[:, :, :S] if Sp != S else out
+    _validate_gates(g_f, g_b, B, H, live_fwd, live_bwd)
+    return _gated_attention_impl(q, k, v, g_f, g_b, causal=causal,
+                                 window=window, block_q=block_q,
+                                 block_k=block_k, interpret=interpret,
+                                 live_fwd=live_fwd, live_bwd=live_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "block_m", "block_n",

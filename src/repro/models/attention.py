@@ -61,7 +61,8 @@ def _repeat_kv(k, Hq: int):
 
 def gated_kernel_attention(q, k, v, g_f, g_b, *, causal: bool,
                            window: int = 0,
-                           interpret: Optional[bool] = None):
+                           interpret: Optional[bool] = None,
+                           live_bounds: Optional[Tuple[int, int]] = None):
     """Pallas-kernel attention with D2FT (g_f, g_b) head gates.
 
     q: [B,S,Hq,hd]; k, v: [B,S,Hkv,hd] (GQA expanded here); g_f, g_b:
@@ -69,14 +70,22 @@ def gated_kernel_attention(q, k, v, g_f, g_b, *, causal: bool,
     heads are zeros and skip the MXU); the custom-VJP backward skips every
     (sample, head) slice with g_b == 0 inside the kernel (p_o and p_s), so
     forward-only micro-batches never pay attention-backward FLOPs.
+
+    live_bounds: optional static (live_fwd, live_bwd) upper bounds on the
+    g_f != 0 / g_b != 0 (sample, head) slice counts — enables compaction
+    dispatch (the kernel grid's leading dim becomes the bound instead of
+    B*Hq and gated-off slices stop paying DMA). Schedule-derived, see
+    ``core.schedule.live_slice_bounds``.
     """
     from repro.kernels.ops import gated_attention
     Hq = q.shape[2]
     k = _repeat_kv(k, Hq)
     v = _repeat_kv(v, Hq)
+    live_f, live_b = live_bounds if live_bounds is not None else (None, None)
     out = gated_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
                           v.transpose(0, 2, 1, 3), g_f, g_b, causal=causal,
-                          window=window, interpret=interpret)
+                          window=window, interpret=interpret,
+                          live_fwd=live_f, live_bwd=live_b)
     return out.transpose(0, 2, 1, 3)
 
 

@@ -88,8 +88,12 @@ def _split_gates(gates, idx):
 
 # ============================================================= block forward
 def _apply_attn_inner(p, h, kind, cfg: ModelConfig, layer_gates, policy,
-                      use_kernel: bool = False):
-    """Attention contribution (pre-residual), with per-head-group gating."""
+                      use_kernel: bool = False, live_bounds=None):
+    """Attention contribution (pre-residual), with per-head-group gating.
+
+    live_bounds: static (live_fwd, live_bwd) bounds at (sample, group)
+    granularity (``core.schedule.live_slice_bounds``); scaled to per-head
+    slice counts here before reaching the kernel's compaction dispatch."""
     window = cfg.window if kind == ATTN_LOCAL else 0
     hd = cfg.resolved_head_dim
     B, S, _ = h.shape
@@ -110,6 +114,7 @@ def _apply_attn_inner(p, h, kind, cfg: ModelConfig, layer_gates, policy,
         # g_f forward gates and a custom VJP whose backward kernels skip all
         # g_b == 0 (sample, head) slices (see kernels/d2ft_attention.py).
         # The window branch is always causal-windowed, matching _window_mask.
+        kernel_bounds = None
         if layer_gates is None:
             gf_h = gb_h = jnp.ones((B, n_heads), h.dtype)
         else:
@@ -117,9 +122,14 @@ def _apply_attn_inner(p, h, kind, cfg: ModelConfig, layer_gates, policy,
             rep = n_heads // g_f.shape[-1]
             gf_h = jnp.repeat(g_f, rep, axis=1).astype(h.dtype)
             gb_h = jnp.repeat(g_b, rep, axis=1).astype(h.dtype)
+            if live_bounds is not None:
+                # schedule bounds are per (sample, group); each group is
+                # rep consecutive per-head slices after the expansion above
+                kernel_bounds = (live_bounds[0] * rep, live_bounds[1] * rep)
         out = attn.gated_kernel_attention(q, k, v, gf_h, gb_h,
                                           causal=cfg.causal or window > 0,
-                                          window=window)
+                                          window=window,
+                                          live_bounds=kernel_bounds)
     else:
         if policy is not None:
             q, k, v = policy.heads(q), policy.kv(k), policy.kv(v)
@@ -209,12 +219,12 @@ def _apply_rglru_inner(p, h, cfg: ModelConfig, layer_gates):
 
 
 def apply_block(p, x, kind: str, cfg: ModelConfig, layer_gates=None,
-                policy=None, use_kernel: bool = False):
+                policy=None, use_kernel: bool = False, live_bounds=None):
     """Pre-norm residual block. Returns (x, aux_losses or None)."""
     h = apply_norm(p["norm1"], x, cfg.norm)
     if kind in (ATTN_GLOBAL, ATTN_LOCAL):
         c = _apply_attn_inner(p["attn"], h, kind, cfg, layer_gates, policy,
-                              use_kernel)
+                              use_kernel, live_bounds)
     elif kind == SSD:
         c = _apply_ssd_inner(p["ssd"], h, cfg, layer_gates)
     elif kind == RGLRU:
@@ -277,7 +287,7 @@ def init_model(key, cfg: ModelConfig):
 # ============================================================ model forward
 def forward(params, cfg: ModelConfig, tokens=None, features=None,
             gates=None, policy=None, remat: bool = False,
-            use_kernel: bool = False):
+            use_kernel: bool = False, live_bounds=None):
     """Returns (logits, aux) — logits [B, S, vocab].
 
     tokens: [B, S_text] int32 (None for pure-audio encoders)
@@ -285,6 +295,10 @@ def forward(params, cfg: ModelConfig, tokens=None, features=None,
     gates: optional (g_f, g_b) of shape [n_layers, B, G]
     use_kernel: route attention blocks through the Pallas gated flash
         kernel (gate-aware custom VJP) instead of the masked dense path.
+    live_bounds: optional static (live_fwd, live_bwd) per-layer max live
+        (sample, group) slice counts from ``core.schedule
+        .live_slice_bounds`` — enables the kernel path's compaction
+        dispatch (one shared bound so scan compiles a single body).
     """
     cdt = jnp.dtype(cfg.compute_dtype)
     parts = []
@@ -319,7 +333,7 @@ def forward(params, cfg: ModelConfig, tokens=None, features=None,
             for i in range(P):
                 lg = (gfc[i], gbc[i]) if gates is not None else None
                 x, a = apply_block(blocks[i], x, pat[i], cfg, lg, policy,
-                                   use_kernel)
+                                   use_kernel, live_bounds)
                 if a is not None:
                     aux = aux + a["load_balance"] + a["router_z"]
             return (x, aux), None
@@ -344,7 +358,7 @@ def forward(params, cfg: ModelConfig, tokens=None, features=None,
         if gates is not None:
             lg = (g_rest[0][i], g_rest[1][i])
         x, a = apply_block(params["rest"][i], x, kind, cfg, lg, policy,
-                           use_kernel)
+                           use_kernel, live_bounds)
         if a is not None:
             aux_sum = aux_sum + a["load_balance"] + a["router_z"]
 
@@ -509,11 +523,11 @@ fused_xent.defvjp(lambda logits, labels: _xent_fwd_impl(logits, labels),
 
 def lm_loss(params, cfg: ModelConfig, tokens, labels, features=None,
             gates=None, policy=None, remat: bool = False,
-            use_kernel: bool = False):
+            use_kernel: bool = False, live_bounds=None):
     """Next-token (or frame-classification) cross-entropy."""
     logits, aux = forward(params, cfg, tokens=tokens, features=features,
                           gates=gates, policy=policy, remat=remat,
-                          use_kernel=use_kernel)
+                          use_kernel=use_kernel, live_bounds=live_bounds)
     if features is not None and tokens is not None:
         # VLM: loss only over the text region (labels align to text tokens)
         logits = logits[:, -labels.shape[1]:]

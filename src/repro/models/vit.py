@@ -71,10 +71,13 @@ def patchify(images, patch: int):
 
 
 def vit_forward(params, images, cfg: ViTConfig, gates=None,
-                use_kernel: bool = False):
+                use_kernel: bool = False, live_bounds=None):
     """images: [B,H,W,3]; gates: optional (g_f, g_b) [n_layers, B, G];
     use_kernel routes attention through the Pallas gated flash kernel
-    (gate-aware backward) instead of the masked dense path.
+    (gate-aware backward) instead of the masked dense path; live_bounds is
+    the optional static (live_fwd, live_bwd) (sample, group) slice bound
+    pair (``core.schedule.live_slice_bounds``) enabling the kernel's
+    compaction dispatch.
 
     Returns logits [B, n_classes].
     """
@@ -87,14 +90,15 @@ def vit_forward(params, images, cfg: ViTConfig, gates=None,
         if gates is not None:
             lg = (gates[0][i], gates[1][i])
         x, _ = apply_block(blk, x, ATTN_GLOBAL, bb, lg,
-                           use_kernel=use_kernel)
+                           use_kernel=use_kernel, live_bounds=live_bounds)
     x = apply_norm(params["final_norm"], x, "layer")
     return x[:, 0] @ params["head"]
 
 
 def vit_loss(params, images, labels, cfg: ViTConfig, gates=None,
-             use_kernel: bool = False):
-    logits = vit_forward(params, images, cfg, gates, use_kernel=use_kernel)
+             use_kernel: bool = False, live_bounds=None):
+    logits = vit_forward(params, images, cfg, gates, use_kernel=use_kernel,
+                         live_bounds=live_bounds)
     logp = jax.nn.log_softmax(logits.astype(jnp.float32))
     ll = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
     loss = -jnp.mean(ll)

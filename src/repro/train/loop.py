@@ -17,7 +17,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import D2FTConfig, ModelConfig
 from repro.core import d2ft as d2ft_mod
-from repro.core.schedule import Schedule, gates_from_schedule, packed_indices
+from repro.core.schedule import (Schedule, gates_from_schedule,
+                                 live_slice_bounds, packed_indices)
 from repro.core.scores import compute_scores, transformer_blocks, vit_blocks
 from repro.data.synthetic import microbatch_assignment
 from repro.models.transformer import lm_loss
@@ -38,13 +39,18 @@ class TrainLog:
 # ------------------------------------------------------------------ LLM path
 def make_train_step(cfg: ModelConfig, opt: Optimizer, *, use_gates: bool,
                     packed: bool = False, policy=None, remat: bool = False,
-                    clip: float = 1.0, use_kernel: bool = False):
+                    clip: float = 1.0, use_kernel: bool = False,
+                    live_bounds=None):
     """Returns jit-able step(params, opt_state, batch[, sched_args]).
 
     use_kernel: run attention through the Pallas gated flash kernel whose
     custom-VJP backward skips p_o / p_s (sample, head-group) slices.
     Ignored on the packed path (packed gathers subnet micro-batches
     instead of gating).
+    live_bounds: static (live_fwd, live_bwd) (sample, group) slice bounds
+    from ``core.schedule.live_slice_bounds`` — enables the kernel path's
+    compaction dispatch. Baked into the jitted step: re-make (and re-jit)
+    the step when the schedule's live counts change.
     """
 
     def loss_of(params, batch, sched_args):
@@ -59,7 +65,8 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, *, use_gates: bool,
         gates = sched_args if use_gates else None
         return lm_loss(params, cfg, batch.get("tokens"), batch["labels"],
                        features=batch.get("features"), gates=gates,
-                       policy=policy, remat=remat, use_kernel=use_kernel)
+                       policy=policy, remat=remat, use_kernel=use_kernel,
+                       live_bounds=live_bounds if use_gates else None)
 
     def step(params, opt_state, batch, sched_args=None):
         (loss, metrics), grads = jax.value_and_grad(
@@ -92,7 +99,18 @@ def finetune(params, cfg: ModelConfig, d2: Optional[D2FTConfig],
     """Fine-tune; if d2 is given, schedule ops per batch via D2FT."""
     log = log or TrainLog()
     opt_state = opt.init(params)
-    step_fn = None
+    # jitted steps cached per compaction bound pair: bounds are re-derived
+    # every batch (batch size or schedule changes change the live counts),
+    # identical counts reuse the cached trace
+    step_fns = {}
+
+    def get_step(bounds):
+        if bounds not in step_fns:
+            step_fns[bounds] = jax.jit(make_train_step(
+                cfg, opt, use_gates=d2 is not None, packed=packed,
+                use_kernel=use_kernel, live_bounds=bounds))
+        return step_fns[bounds]
+
     sched = None
     for i, batch in enumerate(batches):
         if i >= steps:
@@ -104,11 +122,8 @@ def finetune(params, cfg: ModelConfig, d2: Optional[D2FTConfig],
                 cfg, d2, params, mbs,
                 lambda p, mb: lm_loss(p, cfg, mb.get("tokens"), mb["labels"],
                                       features=mb.get("features"))[0])
-        if step_fn is None:
-            step_fn = jax.jit(make_train_step(
-                cfg, opt, use_gates=d2 is not None, packed=packed,
-                use_kernel=use_kernel))
         sched_args = None
+        bounds = None
         if d2 is not None:
             B = batch["labels"].shape[0]
             mb_of = microbatch_assignment(B, d2.n_microbatches)
@@ -118,6 +133,9 @@ def finetune(params, cfg: ModelConfig, d2: Optional[D2FTConfig],
                               jnp.asarray(val))
             else:
                 sched_args = gates_from_schedule(sched, mb_of)
+                if use_kernel:
+                    bounds = live_slice_bounds(sched, mb_of)
+        step_fn = get_step(bounds)
         t0 = time.perf_counter()
         params, opt_state, metrics = step_fn(params, opt_state, batch,
                                              sched_args)
@@ -130,12 +148,16 @@ def finetune(params, cfg: ModelConfig, d2: Optional[D2FTConfig],
 
 # ------------------------------------------------------------------ ViT path
 def make_vit_step(cfg: ViTConfig, opt: Optimizer, use_gates: bool,
-                  clip: float = 1.0, use_kernel: bool = False):
+                  clip: float = 1.0, use_kernel: bool = False,
+                  live_bounds=None):
+    """live_bounds: static (live_fwd, live_bwd) compaction bounds baked
+    into the jitted step (see make_train_step)."""
     def step(params, opt_state, images, labels, gates=None):
         def loss_of(p):
             return vit_loss(p, images, labels, cfg,
                             gates=gates if use_gates else None,
-                            use_kernel=use_kernel)
+                            use_kernel=use_kernel,
+                            live_bounds=live_bounds if use_gates else None)
         (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(params)
         grads, gnorm = clip_by_global_norm(grads, clip)
         params, opt_state = opt.update(grads, opt_state, params)
@@ -157,8 +179,18 @@ def finetune_vit(params, cfg: ViTConfig, opt: Optimizer, batches,
     log = log or TrainLog()
     opt_state = opt.init(params)
     use_gates = schedule_fn is not None
-    step_fn = jax.jit(make_vit_step(cfg, opt, use_gates,
-                                    use_kernel=use_kernel))
+    # jitted steps cached per compaction bound pair — schedule refreshes
+    # that change the live counts re-jit, identical counts reuse the trace
+    step_fns = {}
+
+    def get_step(bounds):
+        if bounds not in step_fns:
+            step_fns[bounds] = jax.jit(make_vit_step(
+                cfg, opt, use_gates, use_kernel=use_kernel,
+                live_bounds=bounds))
+        return step_fns[bounds]
+
+    step_fn = get_step(None)
     sched = None
     for i, (images, labels) in enumerate(batches):
         if i >= steps:
@@ -169,6 +201,8 @@ def finetune_vit(params, cfg: ViTConfig, opt: Optimizer, batches,
             sched = new if new is not None else sched
             mb_of = microbatch_assignment(images.shape[0], n_microbatches)
             gates = gates_from_schedule(sched, mb_of)
+            if use_kernel:
+                step_fn = get_step(live_slice_bounds(sched, mb_of))
         t0 = time.perf_counter()
         params, opt_state, metrics = step_fn(
             params, opt_state, jnp.asarray(images), jnp.asarray(labels),

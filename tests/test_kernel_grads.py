@@ -90,8 +90,9 @@ def test_gb_zero_slices_do_no_backward_matmul_work():
     Static compiled-FLOPs can't observe the skip (interpret mode lowers the
     grid to a loop whose body XLA counts once regardless of taken branches),
     so we count the blocks that actually run: all-p_f executes the full
-    block set of both backward kernels, all-p_o/p_s executes none, and a mix
-    executes exactly the p_f share.
+    block set of the fused backward kernel (one hook call per tile — the
+    old split dq/dkv pair fired twice), all-p_o/p_s executes none, and a
+    mix executes exactly the p_f share.
     """
     B, H, S, hd = 1, 4, 256, 32
     bq = bk = 128
@@ -109,12 +110,17 @@ def test_gb_zero_slices_do_no_backward_matmul_work():
             jax.effects_barrier()       # debug callbacks are async
             return count["n"]
 
-        # causal live tiles per (b, h): 3 of 4; dq + dkv kernels -> 2x
-        per_head = 2 * d2a.live_block_count(S, bq, bk, True, 0)
+        # causal live tiles per (b, h): 3 of 4; ONE fused backward kernel
+        per_head = d2a.live_block_count(S, bq, bk, True, 0)
         assert run(np.ones((B, H), np.float32)) == B * H * per_head
         assert run(np.zeros((B, H), np.float32)) == 0
         half = np.asarray([[1., 1., 0., 0.]], np.float32)
         assert run(half) == 2 * per_head
+        # the analytic accounting reports 5 matmuls per executed tile
+        _, bwd_flops = d2a.gated_attention_flops(
+            np.ones((B, H)), half, S, hd, causal=True, block_q=bq,
+            block_k=bk)
+        assert bwd_flops == 2 * per_head * 5 * (2 * bq * bk * hd)
     finally:
         d2a.on_backward_block = None
 
