@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-kernels bench bench-json quickstart
+.PHONY: test test-kernels bench bench-json docs-check quickstart
 
 test:
 	$(PY) -m pytest -x -q
@@ -14,10 +14,16 @@ test-kernels:
 bench:
 	$(PY) -m benchmarks.run $(if $(ONLY),--only $(ONLY))
 
-# kernel-backward perf snapshot -> BENCH_kernel_backward.json (wall time,
-# executed-FLOP fraction, dispatched-bytes fraction per op mix)
+# machine-readable perf snapshots: BENCH_kernel_backward.json (wall time,
+# executed-FLOP fraction, dispatched-bytes fraction per op mix) and
+# BENCH_distributed_step.json (per-device all-reduce bytes, paper-mix vs
+# all-p_f, on an 8-host-device mesh)
 bench-json:
-	$(PY) -m benchmarks.run --only kernel_backward
+	$(PY) -m benchmarks.run --only kernel_backward,distributed_step
+
+# no dangling file references in docs/*.md + README (CI `docs` job)
+docs-check:
+	$(PY) tools/check_docs.py
 
 quickstart:
 	$(PY) examples/quickstart.py

@@ -1,0 +1,64 @@
+"""Standalone distributed-step benchmark driver (8 host CPU devices).
+
+Must be its own process: ``--xla_force_host_platform_device_count`` is read
+once, when jax initializes, so the flag is set here before any jax import.
+Run directly::
+
+  PYTHONPATH=src python -m benchmarks.dist_step [--n-devices 8] [--kernel]
+
+or through ``python -m benchmarks.run --only distributed_step``, which
+subprocesses this module so the forced device count never leaks into the
+parent's jax runtime. Writes ``BENCH_distributed_step.json`` and prints
+``name,us_per_call,derived`` CSV rows (no header) on stdout.
+"""
+import os
+
+# append rather than setdefault: a pre-existing XLA_FLAGS value must not
+# swallow the device-count flag (make_data_mesh refuses short meshes, but
+# failing to even create 8 devices here should never happen silently)
+_FLAG = "--xla_force_host_platform_device_count"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " "
+                               + _FLAG + "=8").strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import json
+import sys
+
+BENCH_DISTRIBUTED_STEP_JSON = "BENCH_distributed_step.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-devices", type=int, default=8)
+    ap.add_argument("--time-steps", type=int, default=3,
+                    help="executed steps per variant for wall time "
+                         "(0 = lower/compile only)")
+    ap.add_argument("--kernel", action="store_true",
+                    help="route the local shards through the compacted "
+                         "Pallas kernel path (interpret mode on CPU)")
+    ap.add_argument("--out", default=BENCH_DISTRIBUTED_STEP_JSON)
+    args = ap.parse_args()
+
+    from repro.launch.diststep import measure_distributed_step
+    rec = measure_distributed_step(args.n_devices, use_kernel=args.kernel,
+                                   time_steps=args.time_steps)
+    for name, var in rec["variants"].items():
+        reb = var["rebalance"]
+        print(f"distributed_step_{name},"
+              f"{var.get('wall_us_per_step', 0.0):.1f},"
+              f"all_reduce_bytes={var['all_reduce_bytes']:.3e};"
+              f"sync_fraction={var['sync_plan']['fraction']:.3f};"
+              f"load_spread={reb['spread']};imbalance={reb['imbalance']}")
+    print(f"distributed_step_comm_saving,0.0,"
+          f"all_reduce_fraction={rec['all_reduce_fraction']:.3f};"
+          f"sync_model_fraction={rec['sync_model_fraction']:.3f};"
+          f"paper_target<=0.60")
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=2)
+    print(f"# wrote {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

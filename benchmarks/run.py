@@ -396,6 +396,33 @@ def bench_kernel_backward():
     print(f"# wrote {BENCH_KERNEL_BACKWARD_JSON}", file=sys.stderr)
 
 
+# ------------------------------------------- distributed-step comm savings
+def bench_distributed_step():
+    """Paper Eq. 4 executed: the shard_map gated train step on an
+    8-host-device CPU mesh, paper-mix (40% p_f / 30% p_o / 30% p_s,
+    concentrated) schedule vs the all-p_f baseline — wall time per step,
+    per-device all-reduce bytes parsed from compiled HLO, and the
+    schedule-masked sync plan's model prediction. Runs ``benchmarks/
+    dist_step.py`` in a subprocess because the forced host-device count
+    must be set before jax initializes (this process already locked its
+    backend). Writes ``BENCH_distributed_step.json``."""
+    import os
+    import subprocess
+
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    # dist_step.py appends the host-device-count flag to XLA_FLAGS itself
+    proc = subprocess.run([sys.executable, "-m", "benchmarks.dist_step"],
+                          env=env, capture_output=True, text=True)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stdout + proc.stderr)
+        raise RuntimeError("benchmarks.dist_step failed")
+    for line in proc.stdout.splitlines():
+        if line.strip():
+            print(line)
+    sys.stderr.write(proc.stderr)
+
+
 BENCHES = {
     "workload_variance": bench_workload_variance,
     "execution_time": bench_execution_time,
@@ -410,6 +437,7 @@ BENCHES = {
     "lora": bench_lora,
     "packed_flops": bench_packed_flops,
     "kernel_backward": bench_kernel_backward,
+    "distributed_step": bench_distributed_step,
 }
 
 

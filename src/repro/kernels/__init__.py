@@ -1,3 +1,8 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas hot-path kernels for the compute the paper optimizes.
+
+``d2ft_attention`` — D2FT-gated flash attention (gate-aware fused one-pass
+backward, compaction dispatch); ``lora_matmul`` — fused LoRA matmul;
+``ops`` — jit'd public wrappers with backend auto-detection (interpret
+mode off-TPU); ``ref`` — pure-jnp oracles the tests compare against.
+Design notes: docs/kernels.md.
+"""

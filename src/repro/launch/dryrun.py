@@ -11,6 +11,8 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all            # every live pair
   ... [--multi-pod] [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --distributed-step \
+      [--n-devices 8]    # shard_map gated step: per-device collective bytes
 
 Per pair this produces a JSON artifact with:
   * memory_analysis (arg/output/temp bytes per device) of the FULL-depth
@@ -24,9 +26,7 @@ Per pair this produces a JSON artifact with:
 """
 import argparse
 import json
-import re
 import time
-from collections import Counter
 from typing import Dict, Optional
 
 import numpy as np
@@ -36,49 +36,11 @@ import jax.numpy as jnp
 
 from repro.configs import INPUT_SHAPES, SKIPS, get_config, live_pairs
 from repro.configs.base import InputShape, ModelConfig
+from repro.launch.hlo import collective_bytes
 from repro.launch.mesh import make_production_mesh
 from repro.launch import specs as S
 from repro.models.transformer import layer_groups
 from repro.sharding.policy import ShardingPolicy
-
-_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
-                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "c64": 8,
-                "s16": 2, "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
-
-_COLL_RE = re.compile(
-    r"=\s*(\w+)\[([\d,]*)\][^=]*?"
-    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
-    r"[^\n]*?(?:replica_groups=\[(\d+),(\d+)\])?")
-
-
-def collective_bytes(hlo_text: str) -> Dict[str, float]:
-    """Per-device ICI traffic (bytes) by collective type.
-
-    Formulas (ring algorithms, k = group size, n = result bytes/device):
-      all-gather: (k-1)/k * n_out ; all-reduce: 2*(k-1)/k * n ;
-      reduce-scatter: (k-1)/k * n_in ~ (k-1)*n_out ; all-to-all: (k-1)/k * n;
-      collective-permute: n.
-    """
-    out: Dict[str, float] = Counter()
-    for m in _COLL_RE.finditer(hlo_text):
-        dt, dims, op, _, gsz = m.groups()
-        nbytes = _DTYPE_BYTES.get(dt, 4)
-        for d in dims.split(","):
-            if d:
-                nbytes *= int(d)
-        k = int(gsz) if gsz else 2
-        if op == "all-gather":
-            traffic = (k - 1) / k * nbytes
-        elif op == "all-reduce":
-            traffic = 2 * (k - 1) / k * nbytes
-        elif op == "reduce-scatter":
-            traffic = (k - 1) * nbytes
-        elif op == "all-to-all":
-            traffic = (k - 1) / k * nbytes
-        else:
-            traffic = float(nbytes)
-        out[op] += traffic
-    return dict(out)
 
 
 def _reduced(cfg: ModelConfig, n_cycles: int) -> ModelConfig:
@@ -267,7 +229,33 @@ def main():
     ap.add_argument("--capacity-factor", type=float, default=0.0,
                     help="override MoE capacity factor (hillclimb lever)")
     ap.add_argument("--head-groups", type=int, default=0)
+    ap.add_argument("--distributed-step", action="store_true",
+                    help="lower the shard_map distributed D2FT step on a "
+                         "data mesh carved from the host devices and report "
+                         "per-device collective bytes (paper-mix schedule "
+                         "vs all-p_f baseline)")
+    ap.add_argument("--n-devices", type=int, default=8,
+                    help="data-mesh size for --distributed-step")
     args = ap.parse_args()
+
+    if args.distributed_step:
+        from repro.launch.diststep import measure_distributed_step
+        rec = measure_distributed_step(args.n_devices)
+        os.makedirs(args.out, exist_ok=True)
+        path = os.path.join(args.out,
+                            f"distributed_step_{args.n_devices}dev.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        for name, var in rec["variants"].items():
+            print(f"[distributed_step × {name} × {args.n_devices}dev] "
+                  f"all-reduce bytes {var['all_reduce_bytes']:.3e}  "
+                  f"sync-plan fraction {var['sync_plan']['fraction']:.3f}  "
+                  f"load spread {var['rebalance']['spread']}")
+        print(f"paper-mix all-reduce bytes at "
+              f"{rec['all_reduce_fraction']:.1%} of the all-p_f baseline "
+              f"(sync-plan model: {rec['sync_model_fraction']:.1%}) "
+              f"-> {path}")
+        return
 
     pairs = list(live_pairs()) if args.all else [(args.arch, args.shape)]
     meshes = [False, True] if args.both_meshes else [args.multi_pod]

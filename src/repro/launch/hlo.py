@@ -1,0 +1,52 @@
+"""Compiled-HLO collective-traffic accounting.
+
+Shared by the dry-run (``launch/dryrun.py``) and the distributed-step
+measurement (``launch/diststep.py`` / ``benchmarks/dist_step.py``). Lives
+in its own module because ``dryrun.py`` must set ``XLA_FLAGS`` for 512
+host devices at import time — anything that wants the parser without that
+side effect imports it from here.
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter
+from typing import Dict
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+                "s16": 2, "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s*(\w+)\[([\d,]*)\][^=]*?"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^\n]*?(?:replica_groups=\[(\d+),(\d+)\])?")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device ICI traffic (bytes) by collective type.
+
+    Formulas (ring algorithms, k = group size, n = result bytes/device):
+      all-gather: (k-1)/k * n_out ; all-reduce: 2*(k-1)/k * n ;
+      reduce-scatter: (k-1)/k * n_in ~ (k-1)*n_out ; all-to-all: (k-1)/k * n;
+      collective-permute: n.
+    """
+    out: Dict[str, float] = Counter()
+    for m in _COLL_RE.finditer(hlo_text):
+        dt, dims, op, _, gsz = m.groups()
+        nbytes = _DTYPE_BYTES.get(dt, 4)
+        for d in dims.split(","):
+            if d:
+                nbytes *= int(d)
+        k = int(gsz) if gsz else 2
+        if op == "all-gather":
+            traffic = (k - 1) / k * nbytes
+        elif op == "all-reduce":
+            traffic = 2 * (k - 1) / k * nbytes
+        elif op == "reduce-scatter":
+            traffic = (k - 1) * nbytes
+        elif op == "all-to-all":
+            traffic = (k - 1) / k * nbytes
+        else:
+            traffic = float(nbytes)
+        out[op] += traffic
+    return dict(out)

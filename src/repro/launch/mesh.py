@@ -40,6 +40,26 @@ def make_host_mesh(model: int = 1):
     return compat_make_mesh((data, model), ("data", "model"))
 
 
+def make_data_mesh(n_devices=None):
+    """1-D ("data",) mesh over the first n local devices.
+
+    The distributed D2FT train step (train.loop.make_distributed_train_step)
+    is pure data parallelism, so it runs on this or on make_host_mesh's
+    ("data", "model") mesh alike; the explicit device count lets the
+    dry-run carve an 8-device data mesh out of its 512 host devices."""
+    import numpy as np
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if n > len(devs):
+        # never truncate silently: a bench/dry-run asking for 8 devices on
+        # a 1-device backend would otherwise record a bogus measurement
+        raise ValueError(
+            f"requested a {n}-device data mesh but only {len(devs)} local "
+            "devices exist (--xla_force_host_platform_device_count must be "
+            "in XLA_FLAGS before jax initializes)")
+    return jax.sharding.Mesh(np.asarray(devs[:n]), ("data",))
+
+
 # TPU v5e hardware constants used by the roofline analysis.
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip

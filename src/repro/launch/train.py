@@ -26,7 +26,7 @@ from repro.models.transformer import init_model
 from repro.optim.optimizers import adamw, sgd
 from repro.sharding.policy import ShardingPolicy
 from repro.train.checkpoints import save_checkpoint
-from repro.train.loop import finetune
+from repro.train.loop import finetune, finetune_distributed
 
 
 def main():
@@ -41,6 +41,15 @@ def main():
     ap.add_argument("--d2ft", action="store_true")
     ap.add_argument("--packed", action="store_true",
                     help="use the packed D2FT execution path")
+    ap.add_argument("--distributed", action="store_true",
+                    help="data-parallel D2FT over the mesh's data axis: "
+                         "multiple-knapsack device assignment + shard_map "
+                         "gated step with the schedule-masked grad psum "
+                         "(requires --d2ft, excludes --packed)")
+    ap.add_argument("--kernel", action="store_true",
+                    help="route attention through the compacted Pallas "
+                         "gated kernel path (single-device or per-shard "
+                         "with --distributed; interpret mode on CPU)")
     ap.add_argument("--n-pf", type=int, default=3)
     ap.add_argument("--n-po", type=int, default=1)
     ap.add_argument("--n-microbatches", type=int, default=4)
@@ -62,6 +71,9 @@ def main():
     if cfg.frontend != "none":
         raise SystemExit("text-training launcher; audio/vlm archs use the "
                          "example drivers (examples/)")
+    if args.packed and args.kernel:
+        raise SystemExit("--packed and --kernel are exclusive (the packed "
+                         "gather path bypasses the gated attention kernel)")
 
     d2 = None
     if args.d2ft:
@@ -77,8 +89,36 @@ def main():
     batches = lm_batches(0, cfg.vocab_size, args.batch, args.seq,
                          args.steps)
     t0 = time.time()
-    params, opt_state, log = finetune(params, cfg, d2, opt, batches,
-                                      steps=args.steps, packed=args.packed)
+    if args.distributed:
+        if d2 is None:
+            raise SystemExit("--distributed requires --d2ft")
+        if args.packed:
+            raise SystemExit("--distributed and --packed are exclusive "
+                             "(the shard_map step drives the gated paths)")
+        ndev = mesh.shape["data"]
+        if args.n_microbatches % ndev:
+            raise SystemExit(
+                f"--distributed needs --n-microbatches divisible by the "
+                f"data-mesh size: {args.n_microbatches} % {ndev} != 0 "
+                "(equal-sized shard_map shards)")
+        if args.batch % args.n_microbatches:
+            raise SystemExit(
+                f"--batch must be divisible by --n-microbatches: "
+                f"{args.batch} % {args.n_microbatches} != 0")
+        params, opt_state, log = finetune_distributed(
+            params, cfg, d2, opt, batches, steps=args.steps, mesh=mesh,
+            use_kernel=args.kernel)
+        rep, sync = log.extras["rebalance"], log.extras["sync"]
+        print(f"assignment: loads {rep['loads']} spread {rep['spread']} "
+              f"imbalance {rep['imbalance']:.3f}")
+        print(f"grad sync: {sync['fraction']:.0%} of param bytes "
+              f"all-reduced ({sync['n_skipped']} leaves skipped, "
+              f"{sync['n_sliced']} group-sliced)")
+    else:
+        params, opt_state, log = finetune(params, cfg, d2, opt, batches,
+                                          steps=args.steps,
+                                          packed=args.packed,
+                                          use_kernel=args.kernel)
     dt = time.time() - t0
     print(f"{args.steps} steps in {dt:.1f}s — loss "
           f"{log.losses[0]:.3f} -> {log.losses[-1]:.3f}")

@@ -3,6 +3,13 @@
 ``serve_step`` is the unit the decode dry-run shapes lower: ONE new token
 per sequence against a cache of ``seq_len`` tokens. ``generate`` drives a
 full prefill + N-token decode for the examples.
+
+Serving is schedule-free: D2FT only changes *training* (which subnets run
+a backward); the fine-tuned params decode through the ordinary dense path
+here, so nothing in this module consumes a ``Schedule``. Sharded serving
+reuses ``sharding.policy`` via the ``policy=`` hooks on
+``decode_step``/``serve_step`` (the decode dry-run shapes exercise them).
+See docs/architecture.md for where this sits in the stack.
 """
 from __future__ import annotations
 

@@ -1,0 +1,266 @@
+"""Schedule-masked gradient synchronization for the distributed D2FT step.
+
+In data-parallel D2FT every device computes gradients only for its own
+micro-batches, but the masked/kernel gated paths guarantee something
+stronger: a (layer, head-group) subnet with **no p_f micro-batch anywhere
+in the schedule** has *identically zero* gradient on every device — p_o
+contributions are ``stop_gradient``-ed and p_s contributions are zeroed
+before they enter the residual stream. All-reducing those zeros is pure
+waste, and on commodity interconnects gradient all-reduce is the binding
+constraint of distributed fine-tuning. This module turns the host-side
+schedule table into a per-leaf *sync plan* that the shard_map train step
+applies instead of a blanket ``pmean``:
+
+* ``all``     — live backward somewhere in the leaf: full pmean.
+* ``none``    — no live backward in any covered subnet: the psum is elided
+                (every device already holds the exact, zero, global grad).
+* ``sliced``  — the leaf has head-group structure along one axis (wq/wo
+                columns/rows, gated-FFN up/down blocks): only the live
+                groups' contiguous slices are pmean'd; dead slices ride
+                along untouched. This is the fine granularity that makes
+                the skip worth bytes even when a few groups stay live.
+* ``stacked`` — scan-stacked ``cycles`` leaves carry one layer per leading
+                index; each gets its own per-cycle spec.
+
+Safety rails (always ``all``): embeddings / unembeddings / final norm
+(grads flow through every sample), MoE subtrees and their ``norm2`` (the
+router aux losses are *not* gated — they produce gradients regardless of
+the schedule), and any leaf whose group axis is not divisible by G.
+
+``sync_byte_report`` prices the plan (live vs total all-reduce bytes) so
+the dry-run and the ``distributed_step`` bench can report the comm saving
+without parsing HLO, and the HLO-parsed numbers can be cross-checked
+against it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.schedule import P_F, Schedule
+
+
+def backward_live_groups(sched: Schedule) -> np.ndarray:
+    """[L, G] bool — subnet (l, g) has a live backward (any p_f micro-batch).
+
+    Note this is *schedule*-global, not per-device: a subnet live on any
+    device needs the all-reduce on every device (SPMD runs one program)."""
+    return (sched.layer_group_view() == P_F).any(axis=-1)
+
+
+@dataclass(frozen=True)
+class SyncSpec:
+    """Per-leaf gradient synchronization recipe (see module docstring)."""
+    mode: str                                  # all | none | sliced | stacked
+    axis: int = 0                              # sliced: group-block axis
+    live: Tuple[bool, ...] = ()                # sliced: per-group liveness
+    per_cycle: Tuple["SyncSpec", ...] = field(default=())   # stacked
+
+
+_ALL = SyncSpec("all")
+_NONE = SyncSpec("none")
+
+# Leaf name -> axis holding the G contiguous head-group blocks. Matches the
+# group decomposition of the masked path (models/transformer.py
+# _group_project / _apply_ffn) and the packed path's _slice_cols/_slice_rows.
+_Q_AXIS = {"wq": 1, "bq": 0, "wo": 0}
+_KV_AXIS = {"wk": 1, "bk": 0, "wv": 1, "bv": 0}
+_FFN_AXIS = {"w_up": 1, "w_gate": 1, "w_down": 0}
+
+
+def _sliceable_axis(name: str, shape: Tuple[int, ...], cfg: ModelConfig,
+                    G: int):
+    """Axis of the G group blocks in this leaf, or None (coarse leaf)."""
+    axis = None
+    if name in _Q_AXIS:
+        axis = _Q_AXIS[name]
+    elif name in _KV_AXIS:
+        # KV columns align with query groups only when every group owns a
+        # whole number of kv heads; shared kv heads (G % n_kv != 0) receive
+        # gradients from several groups -> coarse.
+        if cfg.n_kv_heads % G == 0:
+            axis = _KV_AXIS[name]
+    elif name in _FFN_AXIS and len(shape) == 2:
+        axis = _FFN_AXIS[name]
+    if axis is None or shape[axis] % G != 0:
+        return None
+    return axis
+
+
+def _leaf_spec(name: str, shape: Tuple[int, ...], live_g: np.ndarray,
+               cfg: ModelConfig, protected: bool) -> SyncSpec:
+    """Spec for one unstacked block leaf given its layer's [G] liveness."""
+    if protected:
+        return _ALL
+    if live_g.all():
+        return _ALL
+    if not live_g.any():
+        return _NONE
+    axis = _sliceable_axis(name, shape, cfg, len(live_g))
+    if axis is None:
+        return _ALL          # partially live, not group-sliceable
+    return SyncSpec("sliced", axis=axis, live=tuple(bool(x) for x in live_g))
+
+
+def _block_plan(block, live_g: np.ndarray, cfg: ModelConfig,
+                stack: int = 0):
+    """Plan for one block's param subtree. ``stack`` > 0 marks scan-stacked
+    leaves whose leading dim holds one layer per index; ``live_g`` is then
+    [stack, G] instead of [G]."""
+    has_moe = isinstance(block, dict) and "moe" in block
+
+    def rec(tree, name, protected):
+        if isinstance(tree, dict):
+            return {k: rec(v, k, protected or k == "moe") for k, v in
+                    tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return [rec(v, name, protected) for v in tree]
+        # MoE router aux losses are computed from norm2(x) regardless of
+        # gating, so the whole FFN side of an MoE block keeps full sync.
+        prot = protected or (has_moe and name == "norm2")
+        if stack == 0:
+            return _leaf_spec(name, tree.shape, live_g, cfg, prot)
+        per_cycle = tuple(_leaf_spec(name, tree.shape[1:], live_g[c], cfg,
+                                     prot) for c in range(stack))
+        if all(s == per_cycle[0] for s in per_cycle):
+            s = per_cycle[0]
+            if s.mode in ("all", "none"):
+                return s
+            # identical slice pattern in every cycle: slice the stacked
+            # leaf directly (group axis shifts past the stack dim)
+            return SyncSpec("sliced", axis=s.axis + 1, live=s.live)
+        return SyncSpec("stacked", per_cycle=per_cycle)
+
+    return rec(block, None, False)
+
+
+def _fill(tree, spec: SyncSpec):
+    if isinstance(tree, dict):
+        return {k: _fill(v, spec) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return [_fill(v, spec) for v in tree]
+    return spec
+
+
+def grad_sync_plan(params, cfg: ModelConfig, sched: Schedule):
+    """Mirror of the params tree with a SyncSpec at every leaf.
+
+    Static and host-side (numpy over the schedule table, shapes from the
+    params/eval_shape tree) — baked into the jitted distributed step, so a
+    new schedule means a new plan and a re-jit, exactly like the compaction
+    bounds."""
+    from repro.models.transformer import layer_groups
+    live = backward_live_groups(sched)                       # [L, G]
+    n_cycles, pat, rem = layer_groups(cfg)
+    P = len(pat)
+    assert live.shape[0] == cfg.n_layers, (live.shape, cfg.n_layers)
+    plan = {}
+    for key, sub in params.items():
+        if key == "cycles":
+            # sub[i]: block at pattern position i, leaves [n_cycles, ...];
+            # cycle c holds layer c * P + i
+            plan[key] = [
+                _block_plan(sub[i],
+                            live[[c * P + i for c in range(n_cycles)]],
+                            cfg, stack=n_cycles)
+                for i in range(P)]
+        elif key == "rest":
+            plan[key] = [_block_plan(sub[i], live[n_cycles * P + i], cfg)
+                         for i in range(len(sub))]
+        else:
+            # embed / unembed / final_norm / frontend_proj: gradients flow
+            # through every sample's loss path — never skip.
+            plan[key] = _fill(sub, _ALL)
+    return plan
+
+
+# ------------------------------------------------------------- application
+def _runs(live: Tuple[bool, ...]):
+    """Merge consecutive equal-liveness groups into (live, start, stop)."""
+    out = []
+    start = 0
+    for g in range(1, len(live) + 1):
+        if g == len(live) or live[g] != live[start]:
+            out.append((live[start], start, g))
+            start = g
+    return out
+
+
+def _sync_leaf(g, spec: SyncSpec, axis_name: str):
+    if spec.mode == "none":
+        return g
+    if spec.mode == "all":
+        return jax.lax.pmean(g, axis_name)
+    if spec.mode == "stacked":
+        return jnp.stack([_sync_leaf(g[c], s, axis_name)
+                          for c, s in enumerate(spec.per_cycle)])
+    blocks = len(spec.live)
+    size = g.shape[spec.axis] // blocks
+    parts = []
+    for is_live, start, stop in _runs(spec.live):
+        seg = jax.lax.slice_in_dim(g, start * size, stop * size,
+                                   axis=spec.axis)
+        parts.append(jax.lax.pmean(seg, axis_name) if is_live else seg)
+    return jnp.concatenate(parts, axis=spec.axis) if len(parts) > 1 \
+        else parts[0]
+
+
+def apply_grad_sync(grads, plan, axis_name: str):
+    """Masked pmean: all-reduce exactly the live slices of the grads tree.
+
+    Must run inside shard_map over ``axis_name``. Skipped leaves/slices are
+    identically zero on every device (see module docstring), so eliding
+    their psum leaves them — correctly — at the global value."""
+    if isinstance(plan, SyncSpec):
+        return _sync_leaf(grads, plan, axis_name)
+    if isinstance(plan, dict):
+        return {k: apply_grad_sync(grads[k], plan[k], axis_name)
+                for k in grads}
+    return [apply_grad_sync(g, p, axis_name) for g, p in zip(grads, plan)]
+
+
+# --------------------------------------------------------------- accounting
+def _live_fraction(spec: SyncSpec) -> float:
+    if spec.mode == "all":
+        return 1.0
+    if spec.mode == "none":
+        return 0.0
+    if spec.mode == "stacked":
+        return float(np.mean([_live_fraction(s) for s in spec.per_cycle]))
+    return float(sum(spec.live)) / len(spec.live)
+
+
+def sync_byte_report(plan, params) -> dict:
+    """Price the plan: bytes entering the gradient all-reduce vs a full
+    pmean of every leaf. Works on concrete arrays or ShapeDtypeStructs."""
+    totals = {"total_bytes": 0.0, "synced_bytes": 0.0, "n_leaves": 0,
+              "n_skipped": 0, "n_sliced": 0}
+
+    def rec(p, spec):
+        if isinstance(spec, SyncSpec):
+            size = float(np.prod(p.shape)) * np.dtype(p.dtype).itemsize
+            totals["total_bytes"] += size
+            totals["synced_bytes"] += size * _live_fraction(spec)
+            totals["n_leaves"] += 1
+            if spec.mode == "none":
+                totals["n_skipped"] += 1
+            elif spec.mode in ("sliced", "stacked"):
+                totals["n_sliced"] += 1
+            return
+        if isinstance(spec, dict):
+            for k in spec:
+                rec(p[k], spec[k])
+        else:
+            for pi, si in zip(p, spec):
+                rec(pi, si)
+
+    rec(params, plan)
+    totals["fraction"] = (totals["synced_bytes"] / totals["total_bytes"]
+                          if totals["total_bytes"] else 1.0)
+    return totals

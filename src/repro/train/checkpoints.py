@@ -2,6 +2,13 @@
 
 Trees are flattened to path-keyed arrays; structure is rebuilt on load from
 the same tree-def derived paths, so any pytree of jnp/np arrays round-trips.
+
+Distributed notes: the shard_map train step keeps params and optimizer
+state replicated (docs/distributed.md), so a checkpoint taken from any
+process is the global state — ``np.asarray`` on a replicated array is a
+local, collective-free read. Restoring into a sharded run is the caller's
+job: ``jax.device_put`` the loaded tree against ``sharding.policy``
+PartitionSpecs (the dry-run's ``_opt_state_shardings`` shows the layout).
 """
 from __future__ import annotations
 

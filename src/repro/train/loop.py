@@ -5,7 +5,6 @@ paper's ViT experiments and is what the paper-table benchmarks call.
 """
 from __future__ import annotations
 
-import functools
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Iterable, Optional
@@ -31,6 +30,8 @@ class TrainLog:
     losses: list = field(default_factory=list)
     metrics: list = field(default_factory=list)
     step_times: list = field(default_factory=list)
+    # distributed path: rebalance report + sync-plan byte report
+    extras: dict = field(default_factory=dict)
 
     def last(self, k: str):
         return self.metrics[-1][k] if self.metrics else None
@@ -83,7 +84,6 @@ def plan_from_scores(cfg: ModelConfig, d2: D2FTConfig, params,
                      score_batches, loss_fn) -> Schedule:
     """Scoring pass (paper: before fine-tuning) + bi-level knapsack."""
     G = d2.head_groups or max(cfg.n_heads, 1)
-    blocks_getter = functools.partial(transformer_blocks, cfg=cfg)
     bw, fw = compute_scores(loss_fn, params,
                             lambda t: transformer_blocks(t, cfg),
                             score_batches, G,
@@ -139,6 +139,114 @@ def finetune(params, cfg: ModelConfig, d2: Optional[D2FTConfig],
         t0 = time.perf_counter()
         params, opt_state, metrics = step_fn(params, opt_state, batch,
                                              sched_args)
+        jax.block_until_ready(metrics["loss"])
+        log.step_times.append(time.perf_counter() - t0)
+        log.losses.append(float(metrics["loss"]))
+        log.metrics.append({k: float(v) for k, v in metrics.items()})
+    return params, opt_state, log
+
+
+# ----------------------------------------------------------- distributed path
+def make_distributed_train_step(cfg: ModelConfig, opt: Optimizer, mesh,
+                                sync_plan, *, clip: float = 1.0,
+                                use_kernel: bool = False, live_bounds=None,
+                                axis_name: str = "data"):
+    """shard_map data-parallel gated train step (paper's *distributed* D2FT).
+
+    Each device runs the masked/kernel gated path on its shard of the batch
+    — its multiple-knapsack-assigned micro-batches after
+    ``core.assignment.device_sample_order`` reordering — then gradients are
+    combined with ``sharding.sync.apply_grad_sync``: only parameters with a
+    live backward somewhere in the schedule enter the pmean; p_o/p_s-only
+    subnets contribute identically-zero grads on every device and their
+    psum is elided (the measured comm saving).
+
+    sync_plan: per-leaf SyncSpec tree from ``sharding.sync.grad_sync_plan``.
+    live_bounds: static per-device (live_fwd, live_bwd) compaction bounds
+    (``core.assignment.distributed_live_bounds``) — each device dispatches
+    only its local shard's live slices through the gated kernels.
+    Returns jitted step(params, opt_state, batch, gates) with params /
+    opt_state replicated, batch sharded on the leading axis and gates
+    [L, B, G] sharded on the sample axis.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.sync import apply_grad_sync
+
+    def local_step(params, opt_state, batch, gates):
+        def loss_of(p):
+            return lm_loss(p, cfg, batch.get("tokens"), batch["labels"],
+                           features=batch.get("features"), gates=gates,
+                           use_kernel=use_kernel, live_bounds=live_bounds)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_of, has_aux=True)(params)
+        grads = apply_grad_sync(grads, sync_plan, axis_name)
+        loss = jax.lax.pmean(loss, axis_name)
+        metrics = {k: jax.lax.pmean(v, axis_name) for k, v in metrics.items()}
+        # post-sync grads are the global mean on every device, so the norm,
+        # clip and optimizer update stay replicated without more collectives
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, dict(metrics, loss=loss, grad_norm=gnorm)
+
+    # check_rep=False: skipped (dead-subnet) grad leaves are device-invariant
+    # — identically zero everywhere — but shard_map's replication tracker
+    # cannot prove that through an elided psum.
+    step = shard_map(
+        local_step, mesh=mesh,
+        in_specs=(P(), P(), P(axis_name),
+                  (P(None, axis_name), P(None, axis_name))),
+        out_specs=(P(), P(), P()),
+        check_rep=False)
+    return jax.jit(step)
+
+
+def finetune_distributed(params, cfg: ModelConfig, d2: D2FTConfig,
+                         opt: Optimizer, batches: Iterable, *, steps: int,
+                         mesh, use_kernel: bool = False, clip: float = 1.0,
+                         log: Optional[TrainLog] = None) -> tuple:
+    """Distributed D2FT fine-tuning: plan once, balance micro-batches over
+    the mesh's data axis with the multiple-knapsack assigner, then drive
+    the shard_map gated step. The rebalance report and the sync-plan byte
+    report land in ``log.extras``."""
+    from repro.core.assignment import (device_sample_order,
+                                       distributed_live_bounds,
+                                       plan_device_assignment)
+    from repro.sharding.sync import grad_sync_plan, sync_byte_report
+
+    log = log or TrainLog()
+    opt_state = opt.init(params)
+    ndev = mesh.shape["data"]
+    sched = assignment = sync_plan = step_fn = None
+    for i, batch in enumerate(batches):
+        if i >= steps:
+            break
+        if sched is None:
+            from repro.data.synthetic import split_microbatches
+            mbs = split_microbatches(batch, d2.n_microbatches)
+            sched = plan_from_scores(
+                cfg, d2, params, mbs,
+                lambda p, mb: lm_loss(p, cfg, mb.get("tokens"), mb["labels"],
+                                      features=mb.get("features"))[0])
+            assignment, report = plan_device_assignment(sched, ndev)
+            sync_plan = grad_sync_plan(params, cfg, sched)
+            log.extras["rebalance"] = report
+            log.extras["sync"] = sync_byte_report(sync_plan, params)
+        B = batch["labels"].shape[0]
+        mb_of = microbatch_assignment(B, d2.n_microbatches)
+        perm = device_sample_order(assignment, mb_of)
+        batch = jax.tree.map(lambda a: a[perm], batch)
+        gates = gates_from_schedule(sched, mb_of[perm])
+        if step_fn is None:
+            bounds = distributed_live_bounds(sched, mb_of, assignment) \
+                if use_kernel else None
+            step_fn = make_distributed_train_step(
+                cfg, opt, mesh, sync_plan, clip=clip,
+                use_kernel=use_kernel, live_bounds=bounds)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch, gates)
         jax.block_until_ready(metrics["loss"])
         log.step_times.append(time.perf_counter() - t0)
         log.losses.append(float(metrics["loss"]))

@@ -1,0 +1,73 @@
+#!/usr/bin/env python
+"""Docs link checker: no dangling file references in docs/*.md + README.md.
+
+Checked reference forms:
+  * markdown links ``[text](target)`` with relative targets (http(s) and
+    pure #anchor links are skipped; a trailing #anchor is stripped);
+  * inline-code path mentions (`src/...`, `docs/...`, `tests/...`,
+    `examples/...`, `benchmarks/...`, `tools/...`, `.github/...`) and the
+    well-known top-level files (README.md, ROADMAP.md, Makefile, ...).
+    References containing globs/placeholders (*, <, {) are skipped, and a
+    `path::symbol` mention checks only the path part.
+
+Relative markdown links resolve against the file's directory; bare path
+mentions resolve against the repo root. Exits 1 listing every dangling
+reference. No dependencies — runs before ``pip install`` in CI.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_SPAN = re.compile(r"`([^`\n]+)`")
+PATH_PREFIXES = ("src/", "docs/", "tests/", "examples/", "benchmarks/",
+                 "tools/", ".github/")
+TOP_LEVEL = {"README.md", "ROADMAP.md", "PAPER.md", "PAPERS.md",
+             "SNIPPETS.md", "CHANGES.md", "Makefile", "requirements.txt"}
+SKIP_CHARS = set("*<>{}$")
+
+
+def refs_in(path: str):
+    text = open(path, encoding="utf-8").read()
+    base = os.path.dirname(path)
+    for m in MD_LINK.finditer(text):
+        target = m.group(1).split("#")[0]
+        if not target or "://" in target or target.startswith("mailto:"):
+            continue
+        yield m.group(0), os.path.normpath(os.path.join(base, target))
+    for m in CODE_SPAN.finditer(text):
+        ref = m.group(1).split("::")[0].strip()
+        if SKIP_CHARS & set(ref) or " " in ref:
+            continue
+        if not (ref.startswith(PATH_PREFIXES) or ref in TOP_LEVEL):
+            continue
+        yield f"`{m.group(1)}`", os.path.normpath(os.path.join(ROOT, ref))
+
+
+def main() -> int:
+    files = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    files.append(os.path.join(ROOT, "README.md"))
+    dangling = []
+    checked = 0
+    for f in files:
+        for shown, target in refs_in(f):
+            checked += 1
+            if not os.path.exists(target):
+                dangling.append((os.path.relpath(f, ROOT), shown))
+    if dangling:
+        print(f"{len(dangling)} dangling file reference(s):")
+        for src, shown in dangling:
+            print(f"  {src}: {shown}")
+        return 1
+    print(f"docs OK: {checked} file references resolve "
+          f"across {len(files)} markdown files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
