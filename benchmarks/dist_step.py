@@ -48,6 +48,7 @@ def main():
         reb = var["rebalance"]
         print(f"distributed_step_{name},"
               f"{var.get('wall_us_per_step', 0.0):.1f},"
+              f"wire_bytes={var['wire_bytes']:.3e};"
               f"all_reduce_bytes={var['all_reduce_bytes']:.3e};"
               f"sync_fraction={var['sync_plan']['fraction']:.3f};"
               f"load_spread={reb['spread']};imbalance={reb['imbalance']}")
@@ -55,6 +56,13 @@ def main():
           f"all_reduce_fraction={rec['all_reduce_fraction']:.3f};"
           f"sync_model_fraction={rec['sync_model_fraction']:.3f};"
           f"paper_target<=0.60")
+    z = rec["zero_sync"]
+    print(f"zero_sync,0.0,"
+          f"paper_mix_wire_fraction={z['paper_mix_wire_fraction']:.3f};"
+          f"masked_wire_fraction={z['paper_mix_masked_wire_fraction']:.3f};"
+          f"uniform_wire_fraction={z['uniform_wire_fraction']:.3f};"
+          f"uniform_masked_n_skipped={z['uniform_masked_n_skipped']};"
+          f"opt_memory_fraction={z['opt_memory_fraction']:.4f}")
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=2)
     print(f"# wrote {args.out}", file=sys.stderr)

@@ -399,13 +399,16 @@ def bench_kernel_backward():
 # ------------------------------------------- distributed-step comm savings
 def bench_distributed_step():
     """Paper Eq. 4 executed: the shard_map gated train step on an
-    8-host-device CPU mesh, paper-mix (40% p_f / 30% p_o / 30% p_s,
-    concentrated) schedule vs the all-p_f baseline — wall time per step,
-    per-device all-reduce bytes parsed from compiled HLO, and the
-    schedule-masked sync plan's model prediction. Runs ``benchmarks/
-    dist_step.py`` in a subprocess because the forced host-device count
-    must be set before jax initializes (this process already locked its
-    backend). Writes ``BENCH_distributed_step.json``."""
+    8-host-device CPU mesh over a schedule x sync-mode matrix — paper-mix
+    (40% p_f / 30% p_o / 30% p_s, concentrated) and uniform-half (spread)
+    schedules under the masked psum and the ZeRO reduce-scatter/all-gather
+    sync, vs the all-p_f baseline. Reports wall time per step, per-device
+    collective bytes parsed from compiled HLO, the sync plan's wire-byte
+    model, and the ``zero_sync`` summary (wire fractions + sharded-moment
+    memory). Runs ``benchmarks/dist_step.py`` in a subprocess because the
+    forced host-device count must be set before jax initializes (this
+    process already locked its backend). Writes
+    ``BENCH_distributed_step.json``."""
     import os
     import subprocess
 

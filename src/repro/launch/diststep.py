@@ -1,19 +1,25 @@
 """Distributed-step measurement: lower the shard_map gated train step and
-price its gradient all-reduce against the all-p_f baseline.
+price its gradient sync against the all-p_f baseline.
 
 This is the executable evidence for the paper's *distributed* claim: with a
 schedule that concentrates p_f onto a subset of subnets (the paper's
 "you don't need all attentions" regime — heterogeneous capacities, frozen
 low-score heads), the schedule-masked psum
 (``sharding.sync.apply_grad_sync``) elides the dead subnets' all-reduces
-and the compiled HLO carries measurably fewer collective bytes.
+and the compiled HLO carries measurably fewer collective bytes. The ZeRO
+variants (``sync_mode="zero"``) replace the masked psum with a sliced
+reduce-scatter + schedule-masked all-gather and shard the optimizer
+moments; their wire bytes match the masked psum at equal masks (ring
+physics — see docs/distributed.md) while per-device moment memory drops to
+~1/n_devices, measured here via ``zero_state_byte_report``.
 
 No import-time side effects: callers must provide enough local devices
 (``launch.dryrun`` runs under 512 host devices; ``benchmarks/dist_step.py``
-forces 8 before importing jax). The comm skip is subnet-granular, so an
-iid-random mix — where nearly every subnet keeps some p_f micro-batch —
-shows little saving; ``paper_mix_schedule`` builds the concentrated form
-(see docs/distributed.md for why both are faithful to the paper).
+forces 8 before importing jax). ``paper_mix_schedule`` builds the
+concentrated form; ``uniform_half_schedule`` the uniformly spread form
+where whole-subnet elision never fires and only sub-leaf granularity
+(sliced runs / the ZeRO live-run scatter) saves bytes (see
+docs/distributed.md for why both are faithful to the paper).
 """
 from __future__ import annotations
 
@@ -36,7 +42,8 @@ from repro.launch.hlo import collective_bytes
 from repro.launch.mesh import make_data_mesh
 from repro.models.transformer import init_model
 from repro.optim.optimizers import adamw
-from repro.sharding.sync import grad_sync_plan, sync_byte_report
+from repro.sharding.sync import (grad_sync_plan, sync_byte_report,
+                                 zero_state_byte_report)
 from repro.train.loop import make_distributed_train_step
 
 
@@ -80,29 +87,69 @@ def all_pf_schedule(n_layers: int, n_groups: int, n_mb: int) -> Schedule:
                     n_layers, n_groups)
 
 
+def uniform_half_schedule(n_layers: int, n_groups: int, n_mb: int,
+                          live_frac: float = 0.5, seed: int = 0) -> Schedule:
+    """Uniformly spread live subnets: every layer has round(G * live_frac)
+    backward-live groups at a rotating offset, so no layer (and no leaf) is
+    fully dead or fully live. This is the regime where PR 3's whole-subnet
+    psum elision (`none` specs) never fires — the saving must come from
+    sub-leaf granularity (sliced runs / the ZeRO live-run scatter). Live
+    rows run p_f on every micro-batch; dead rows split p_o / p_s."""
+    n_live = max(1, min(n_groups - 1, int(round(live_frac * n_groups))))
+    rng = np.random.default_rng(seed)
+    table = np.full((n_layers * n_groups, n_mb), P_S, np.int8)
+    for layer in range(n_layers):
+        for j in range(n_live):
+            g = (layer + j * max(n_groups // n_live, 1)) % n_groups
+            table[layer * n_groups + g] = P_F
+    dead = np.nonzero((table != P_F).all(axis=1))[0]
+    for r in dead:
+        po = rng.random(n_mb) < 0.5
+        table[r, po] = P_O
+    return Schedule(table, n_layers, n_groups)
+
+
 def measure_distributed_step(n_devices: int = 8, *,
                              cfg: Optional[ModelConfig] = None,
                              batch: int = 32, seq: int = 32, n_mb: int = 8,
                              mix: Tuple[float, float, float] = (.4, .3, .3),
                              seed: int = 0, use_kernel: bool = False,
                              time_steps: int = 0) -> dict:
-    """Lower + compile the distributed step for the paper-mix schedule and
-    the all-p_f baseline on an n-device data mesh; parse per-device
-    collective bytes from the compiled HLO and cross-check them against the
-    sync plan's byte model. time_steps > 0 additionally executes that many
-    steps per variant for wall time."""
+    """Lower + compile the distributed step on an n-device data mesh for a
+    schedule × sync-mode matrix: the all-p_f baseline, the concentrated
+    paper-mix under masked psum and ZeRO sync, and the uniformly spread
+    50%-live schedule (where whole-subnet elision never fires) under both.
+    Per-device collective bytes are parsed from the compiled HLO and
+    cross-checked against the sync plan's wire-byte model; the ``zero_sync``
+    summary carries the ZeRO acceptance numbers (wire fractions, per-device
+    optimizer-moment memory). time_steps > 0 additionally executes that
+    many steps per variant for wall time.
+
+    The optimizer is decay-free AdamW: zero weight decay keeps it
+    *elidable* (``Optimizer.elidable``), so the ZeRO gather mask can skip
+    backward-dead runs — with decay every run's params change each step and
+    the gather must be dense."""
     cfg = cfg or small_config()
     G = cfg.n_heads
     mesh = make_data_mesh(n_devices)
     params = init_model(jax.random.PRNGKey(seed), cfg)
-    opt = adamw(1e-3)
+    opt = adamw(1e-3, weight_decay=0.0)
     opt_state = opt.init(params)
     data = next(lm_batches(seed, cfg.vocab_size, batch, seq, 1))
     mb_of = microbatch_assignment(batch, n_mb)
 
-    variants = {
+    schedules = {
         "all_pf_baseline": all_pf_schedule(cfg.n_layers, G, n_mb),
         "paper_mix": paper_mix_schedule(cfg.n_layers, G, n_mb, mix, seed),
+        "uniform_half": uniform_half_schedule(cfg.n_layers, G, n_mb,
+                                              seed=seed),
+    }
+    variants = {
+        "all_pf_baseline": ("all_pf_baseline", "masked"),
+        "paper_mix": ("paper_mix", "masked"),
+        "paper_mix_zero": ("paper_mix", "zero"),
+        "uniform_half": ("uniform_half", "masked"),
+        "uniform_half_zero": ("uniform_half", "zero"),
     }
     record = {
         "n_devices": n_devices, "mix": list(mix), "seed": seed,
@@ -114,29 +161,42 @@ def measure_distributed_step(n_devices: int = 8, *,
         "backend": jax.default_backend(),
         "variants": {},
     }
-    for name, sched in variants.items():
+    for name, (sched_name, sync_mode) in variants.items():
+        sched = schedules[sched_name]
         assignment, rebalance = plan_device_assignment(sched, n_devices)
         perm = device_sample_order(assignment, mb_of)
         pbatch = jax.tree.map(lambda a: a[perm], data)
         gates = gates_from_schedule(sched, mb_of[perm])
-        plan = grad_sync_plan(params, cfg, sched)
+        plan = grad_sync_plan(params, cfg, sched, mode=sync_mode,
+                              n_shards=n_devices,
+                              elide_gather=opt.elidable)
         bounds = distributed_live_bounds(sched, mb_of, assignment) \
             if use_kernel else None
         step = make_distributed_train_step(cfg, opt, mesh, plan,
                                            use_kernel=use_kernel,
-                                           live_bounds=bounds)
+                                           live_bounds=bounds,
+                                           sync_mode=sync_mode,
+                                           params=params)
         args = (params, opt_state, pbatch, gates)
         compiled = step.lower(*args).compile()
-        coll = collective_bytes(compiled.as_text())
+        coll = collective_bytes(compiled.as_text(),
+                                default_group_size=n_devices)
         var = {
+            "schedule": sched_name,
+            "sync_mode": sync_mode,
             "op_counts": op_counts(sched),
             "cost_model": {"compute": round(compute_cost(sched.table), 4),
                            "comm": round(comm_cost(sched.table), 4)},
             "collectives": coll,
             "all_reduce_bytes": float(coll.get("all-reduce", 0.0)),
-            "sync_plan": sync_byte_report(plan, params),
+            "wire_bytes": float(sum(coll.values())),
+            "sync_plan": sync_byte_report(plan, params,
+                                          n_shards=n_devices),
             "rebalance": rebalance,
         }
+        if sync_mode == "zero":
+            var["opt_memory"] = zero_state_byte_report(
+                plan, params, n_devices, n_moments=2)   # adam m + v
         if bounds is not None:
             var["live_bounds"] = list(bounds)
         if time_steps > 0:
@@ -152,9 +212,29 @@ def measure_distributed_step(n_devices: int = 8, *,
                 / time_steps * 1e6
         record["variants"][name] = var
 
-    base = record["variants"]["all_pf_baseline"]["all_reduce_bytes"]
-    mix_b = record["variants"]["paper_mix"]["all_reduce_bytes"]
-    record["all_reduce_fraction"] = mix_b / base if base else 1.0
+    v = record["variants"]
+    base_ar = v["all_pf_baseline"]["all_reduce_bytes"]
+    base_wire = v["all_pf_baseline"]["wire_bytes"]
+    record["all_reduce_fraction"] = \
+        v["paper_mix"]["all_reduce_bytes"] / base_ar if base_ar else 1.0
     record["sync_model_fraction"] = \
-        record["variants"]["paper_mix"]["sync_plan"]["fraction"]
+        v["paper_mix"]["sync_plan"]["fraction"]
+
+    def wire_frac(name):
+        return v[name]["wire_bytes"] / base_wire if base_wire else 1.0
+
+    record["zero_sync"] = {
+        # sliced RS+AG vs the same schedule's masked psum and the baseline
+        "paper_mix_wire_fraction": wire_frac("paper_mix_zero"),
+        "paper_mix_masked_wire_fraction": wire_frac("paper_mix"),
+        # the uniformly spread schedule: whole-subnet elision never fires
+        # (n_skipped == 0 below) yet the run-masked sync still saves
+        "uniform_wire_fraction": wire_frac("uniform_half_zero"),
+        "uniform_masked_wire_fraction": wire_frac("uniform_half"),
+        "uniform_masked_n_skipped":
+            v["uniform_half"]["sync_plan"]["n_skipped"],
+        # per-device Adam moment memory under the ZeRO partition
+        "opt_memory_fraction":
+            v["paper_mix_zero"]["opt_memory"]["fraction"],
+    }
     return record

@@ -153,7 +153,12 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool = False,
         ca = compiled.cost_analysis() or {}
         record["flops_raw"] = float(ca.get("flops", 0.0))
         record["bytes_raw"] = float(ca.get("bytes accessed", 0.0))
-        record["collectives_raw"] = collective_bytes(compiled.as_text())
+        # empty replica_groups={} prints mean "all participants": the
+        # model axis is the group for the dominant tensor-parallel
+        # collectives, a conservative default for the rest
+        ndev_default = mesh.shape.get("model", mesh.size)
+        record["collectives_raw"] = collective_bytes(
+            compiled.as_text(), default_group_size=ndev_default)
         record["policy"] = policy.report()
 
         # ---- depth extrapolation (scan bodies counted once by XLA)
@@ -170,7 +175,8 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool = False,
                 per_depth[k] = {
                     "flops": float(cak.get("flops", 0.0)),
                     "bytes": float(cak.get("bytes accessed", 0.0)),
-                    "coll": collective_bytes(ck.as_text()),
+                    "coll": collective_bytes(
+                        ck.as_text(), default_group_size=ndev_default),
                 }
             f1, f2 = per_depth[1]["flops"], per_depth[2]["flops"]
             b1, b2 = per_depth[1]["bytes"], per_depth[2]["bytes"]
@@ -248,12 +254,16 @@ def main():
             json.dump(rec, f, indent=1)
         for name, var in rec["variants"].items():
             print(f"[distributed_step × {name} × {args.n_devices}dev] "
-                  f"all-reduce bytes {var['all_reduce_bytes']:.3e}  "
+                  f"wire bytes {var['wire_bytes']:.3e}  "
                   f"sync-plan fraction {var['sync_plan']['fraction']:.3f}  "
                   f"load spread {var['rebalance']['spread']}")
+        z = rec["zero_sync"]
         print(f"paper-mix all-reduce bytes at "
               f"{rec['all_reduce_fraction']:.1%} of the all-p_f baseline "
-              f"(sync-plan model: {rec['sync_model_fraction']:.1%}) "
+              f"(sync-plan model: {rec['sync_model_fraction']:.1%}); "
+              f"zero sync: paper-mix wire {z['paper_mix_wire_fraction']:.1%}, "
+              f"uniform wire {z['uniform_wire_fraction']:.1%}, "
+              f"opt memory {z['opt_memory_fraction']:.1%} "
               f"-> {path}")
         return
 

@@ -16,28 +16,74 @@ _DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
                 "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "c64": 8,
                 "s16": 2, "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
 
+# Async pairs (`-start`/`-done`, GPU backends) count once, at `-done`,
+# whose result shape is the plain array (`-start` results are often
+# tuple-shaped and would not parse).
 _COLL_RE = re.compile(
     r"=\s*(\w+)\[([\d,]*)\][^=]*?"
     r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
-    r"[^\n]*?(?:replica_groups=\[(\d+),(\d+)\])?")
+    r"(-start|-done)?\(([^\n]*)")
+
+# replica_groups comes in two prints: explicit lists `{{0,1,2},{3,4,5}}`
+# (group size = members of the first group) and the iota form
+# `[n_groups,group_size]<=[...]`. An empty `replica_groups={}` means one
+# group of every participant — only the caller knows that count.
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CHANNEL_RE = re.compile(r"channel_id=(\d+)")
+
+# `-start` halves of async pairs carry the replica_groups attribute (their
+# tuple-shaped results don't parse as array instructions), so group sizes
+# are collected from them by channel_id and looked up when the matching
+# `-done` is priced.
+_START_RE = re.compile(
+    r"(?:all-gather|all-reduce|reduce-scatter|all-to-all"
+    r"|collective-permute)-start\(([^\n]*)")
 
 
-def collective_bytes(hlo_text: str) -> Dict[str, float]:
+def _group_size(rest_of_line: str, default: int) -> int:
+    m = _GROUPS_LIST_RE.search(rest_of_line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(rest_of_line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def collective_bytes(hlo_text: str,
+                     default_group_size: int = 2) -> Dict[str, float]:
     """Per-device ICI traffic (bytes) by collective type.
 
     Formulas (ring algorithms, k = group size, n = result bytes/device):
       all-gather: (k-1)/k * n_out ; all-reduce: 2*(k-1)/k * n ;
       reduce-scatter: (k-1)/k * n_in ~ (k-1)*n_out ; all-to-all: (k-1)/k * n;
       collective-permute: n.
+    default_group_size: group size assumed when the instruction does not
+    print one (`replica_groups={}` = all participants) — pass the mesh
+    size when it is known.
     """
+    start_groups = {}
+    for m in _START_RE.finditer(hlo_text):
+        ch = _CHANNEL_RE.search(m.group(1))
+        k = _group_size(m.group(1), 0)
+        if ch and k:
+            start_groups[ch.group(1)] = k
     out: Dict[str, float] = Counter()
     for m in _COLL_RE.finditer(hlo_text):
-        dt, dims, op, _, gsz = m.groups()
+        dt, dims, op, phase, rest = m.groups()
+        if phase == "-start":
+            continue                 # counted once, at the matching -done
         nbytes = _DTYPE_BYTES.get(dt, 4)
         for d in dims.split(","):
             if d:
                 nbytes *= int(d)
-        k = int(gsz) if gsz else 2
+        k = _group_size(rest, 0)
+        if not k and phase == "-done":
+            ch = _CHANNEL_RE.search(rest)
+            k = start_groups.get(ch.group(1), 0) if ch else 0
+        if not k:
+            k = default_group_size
         if op == "all-gather":
             traffic = (k - 1) / k * nbytes
         elif op == "all-reduce":

@@ -50,6 +50,16 @@ def main():
                     help="route attention through the compacted Pallas "
                          "gated kernel path (single-device or per-shard "
                          "with --distributed; interpret mode on CPU)")
+    ap.add_argument("--sync-mode", choices=("masked", "zero"),
+                    default="masked",
+                    help="distributed gradient sync: 'masked' = schedule-"
+                         "masked psum (replicated optimizer state), "
+                         "'zero' = ZeRO-1 sliced reduce-scatter/all-gather "
+                         "with optimizer moments sharded ~1/n_devices")
+    ap.add_argument("--refresh-every", type=int, default=None,
+                    help="re-plan the schedule (and re-run the knapsack "
+                         "device assigner, rebuild the sync plan) every "
+                         "k steps")
     ap.add_argument("--n-pf", type=int, default=3)
     ap.add_argument("--n-po", type=int, default=1)
     ap.add_argument("--n-microbatches", type=int, default=4)
@@ -74,6 +84,10 @@ def main():
     if args.packed and args.kernel:
         raise SystemExit("--packed and --kernel are exclusive (the packed "
                          "gather path bypasses the gated attention kernel)")
+    if not args.distributed and (args.sync_mode != "masked"
+                                 or args.refresh_every is not None):
+        raise SystemExit("--sync-mode/--refresh-every only apply to the "
+                         "--distributed path")
 
     d2 = None
     if args.d2ft:
@@ -107,13 +121,21 @@ def main():
                 f"{args.batch} % {args.n_microbatches} != 0")
         params, opt_state, log = finetune_distributed(
             params, cfg, d2, opt, batches, steps=args.steps, mesh=mesh,
-            use_kernel=args.kernel)
+            use_kernel=args.kernel, sync_mode=args.sync_mode,
+            refresh_every=args.refresh_every)
         rep, sync = log.extras["rebalance"], log.extras["sync"]
         print(f"assignment: loads {rep['loads']} spread {rep['spread']} "
-              f"imbalance {rep['imbalance']:.3f}")
-        print(f"grad sync: {sync['fraction']:.0%} of param bytes "
-              f"all-reduced ({sync['n_skipped']} leaves skipped, "
-              f"{sync['n_sliced']} group-sliced)")
+              f"imbalance {rep['imbalance']:.3f} "
+              f"({len(log.extras.get('refreshes', []))} replans)")
+        if args.sync_mode == "zero":
+            print(f"grad sync (zero): {sync['fraction']:.0%} all-reduce-"
+                  f"equivalent bytes ({sync['n_zero']} leaves partitioned "
+                  f"over {ndev} shards, rs {sync['rs_bytes']:.2e}B / "
+                  f"ag {sync['ag_bytes']:.2e}B)")
+        else:
+            print(f"grad sync: {sync['fraction']:.0%} of param bytes "
+                  f"all-reduced ({sync['n_skipped']} leaves skipped, "
+                  f"{sync['n_sliced']} group-sliced)")
     else:
         params, opt_state, log = finetune(params, cfg, d2, opt, batches,
                                           steps=args.steps,

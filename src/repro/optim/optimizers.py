@@ -16,6 +16,11 @@ import jax.numpy as jnp
 class Optimizer(NamedTuple):
     init: Callable[[Any], Any]
     update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+    # True when a parameter shard with zero gradient AND zero moments gets
+    # an exactly-identity update (no weight decay): the ZeRO-1 sync may
+    # then elide the param all-gather for runs that have been backward-dead
+    # since their moments were last zero (sharding/sync.py zero mode).
+    elidable: bool = True
 
 
 def sgd(lr: float, momentum: float = 0.9, weight_decay: float = 0.0,
@@ -35,7 +40,7 @@ def sgd(lr: float, momentum: float = 0.9, weight_decay: float = 0.0,
         new_params = jax.tree.map(lambda p, u: p - lr * u, params, upd)
         return new_params, {"mu": mu, "step": state["step"] + 1}
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, elidable=weight_decay == 0.0)
 
 
 def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
@@ -60,11 +65,18 @@ def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
         new_params = jax.tree.map(upd, params, m, v)
         return new_params, {"m": m, "v": v, "step": step}
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, elidable=weight_decay == 0.0)
+
+
+def clip_scale(norm, max_norm: float):
+    """Global-norm clip factor — shared by clip_by_global_norm and the
+    distributed ZeRO step (which computes the norm itself, via a scalar
+    psum over grad shards)."""
+    return jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
 
 
 def clip_by_global_norm(grads, max_norm: float):
     leaves = jax.tree.leaves(grads)
     norm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
-    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    scale = clip_scale(norm, max_norm)
     return jax.tree.map(lambda g: g * scale, grads), norm

@@ -31,11 +31,42 @@ the schedule), and any leaf whose group axis is not divisible by G.
 the dry-run and the ``distributed_step`` bench can report the comm saving
 without parsing HLO, and the HLO-parsed numbers can be cross-checked
 against it.
+
+ZeRO-1 form (``mode="zero"``)
+-----------------------------
+``grad_sync_plan(..., mode="zero", n_shards=k)`` replaces the masked pmean
+with a partitioned sync: every leaf that can be evenly split over the data
+mesh gets a ``zero`` spec that
+
+* **reduce-scatters** only the runs of backward-live groups (dead runs are
+  locally sliced — their gradient is identically zero on every device, so
+  the device's own sub-chunk already holds the global value);
+* hands each device one owned shard per leaf (for each (live, gather) run,
+  device d owns the d-th sub-chunk of the run), on which the optimizer
+  moments live and the update executes — per-device moment memory drops to
+  ~1/k of the replicated baseline;
+* **all-gathers** only the runs whose parameters can have changed: the
+  backward-live runs plus any run that was ever live since the moments
+  were last zero (``ever_live``). A dead run with zero moments has an
+  identity update under an *elidable* optimizer (zero weight decay — see
+  ``Optimizer.elidable``), so its params are still replicated-correct
+  without the gather. Non-elidable optimizers force a full gather mask.
+
+Wire-byte accounting is honest about the physics: reduce-scatter +
+all-gather of a live run costs exactly what a ring all-reduce of the same
+run costs (2·(k-1)/k bytes per element), so the zero mode *matches* the
+masked psum's bytes at equal masks — its wins are the sharded optimizer
+state, shard-sized update FLOPs, and that partially-live leaves never pay
+a full-tensor collective even where whole-subnet elision can't fire.
+Leaves with no evenly divisible axis fall back to their masked spec (and
+keep replicated moments); ``sync_byte_report(..., n_shards=k)`` prices
+both collectives separately plus the ring-wire total, and
+``zero_state_byte_report`` prices the per-device moment memory.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -57,10 +88,12 @@ def backward_live_groups(sched: Schedule) -> np.ndarray:
 @dataclass(frozen=True)
 class SyncSpec:
     """Per-leaf gradient synchronization recipe (see module docstring)."""
-    mode: str                                  # all | none | sliced | stacked
-    axis: int = 0                              # sliced: group-block axis
-    live: Tuple[bool, ...] = ()                # sliced: per-group liveness
-    per_cycle: Tuple["SyncSpec", ...] = field(default=())   # stacked
+    mode: str              # all | none | sliced | stacked | zero | zero_stacked
+    axis: int = 0                              # sliced/zero: partition axis
+    live: Tuple[bool, ...] = ()                # per-group backward liveness
+    per_cycle: Tuple["SyncSpec", ...] = field(default=())   # (zero_)stacked
+    gather: Tuple[bool, ...] = ()              # zero: param all-gather mask
+    shards: int = 0                            # zero: data-mesh size k
 
 
 _ALL = SyncSpec("all")
@@ -108,12 +141,59 @@ def _leaf_spec(name: str, shape: Tuple[int, ...], live_g: np.ndarray,
     return SyncSpec("sliced", axis=axis, live=tuple(bool(x) for x in live_g))
 
 
+def _zero_axis(name: str, shape: Tuple[int, ...], cfg: ModelConfig, G: int,
+               k: int):
+    """(partition axis, groups along it) for a zero leaf, or None.
+
+    Group-sliceable leaves keep mask granularity G when every group block
+    splits evenly over the k shards; otherwise the leaf is partitioned
+    coarse (one run spanning the largest evenly divisible axis)."""
+    axis = _sliceable_axis(name, shape, cfg, G)
+    if axis is not None and (shape[axis] // G) % k == 0:
+        return axis, G
+    divisible = [a for a in range(len(shape)) if shape[a] % k == 0]
+    if not divisible:
+        return None
+    return max(divisible, key=lambda a: shape[a]), 1
+
+
+def _zero_leaf_spec(name: str, shape: Tuple[int, ...], live_g: np.ndarray,
+                    ever_g: np.ndarray, cfg: ModelConfig, protected: bool,
+                    k: int, elide_gather: bool) -> SyncSpec:
+    """Zero-mode spec for one unstacked leaf: partition + (live, gather)
+    masks; falls back to the masked spec when no axis splits evenly."""
+    part = _zero_axis(name, shape, cfg, len(live_g), k)
+    if part is None:
+        return _leaf_spec(name, shape, live_g, cfg, protected)
+    axis, groups = part
+    if protected:
+        live_g = np.ones_like(live_g)
+    gather_g = live_g | ever_g if elide_gather \
+        else np.ones_like(live_g, bool)
+    if groups == 1:
+        live_g = np.atleast_1d(live_g.any())
+        gather_g = np.atleast_1d(gather_g.any())
+    return SyncSpec("zero", axis=axis, shards=k,
+                    live=tuple(bool(x) for x in live_g),
+                    gather=tuple(bool(x) for x in gather_g))
+
+
 def _block_plan(block, live_g: np.ndarray, cfg: ModelConfig,
-                stack: int = 0):
+                stack: int = 0, *, mode: str = "masked", n_shards: int = 0,
+                ever_g: Optional[np.ndarray] = None,
+                elide_gather: bool = True):
     """Plan for one block's param subtree. ``stack`` > 0 marks scan-stacked
     leaves whose leading dim holds one layer per index; ``live_g`` is then
     [stack, G] instead of [G]."""
     has_moe = isinstance(block, dict) and "moe" in block
+    if ever_g is None:
+        ever_g = np.zeros_like(live_g)
+
+    def leaf(name, shape, lg, eg, prot):
+        if mode == "zero":
+            return _zero_leaf_spec(name, shape, lg, eg, cfg, prot, n_shards,
+                                   elide_gather)
+        return _leaf_spec(name, shape, lg, cfg, prot)
 
     def rec(tree, name, protected):
         if isinstance(tree, dict):
@@ -125,16 +205,23 @@ def _block_plan(block, live_g: np.ndarray, cfg: ModelConfig,
         # gating, so the whole FFN side of an MoE block keeps full sync.
         prot = protected or (has_moe and name == "norm2")
         if stack == 0:
-            return _leaf_spec(name, tree.shape, live_g, cfg, prot)
-        per_cycle = tuple(_leaf_spec(name, tree.shape[1:], live_g[c], cfg,
-                                     prot) for c in range(stack))
+            return leaf(name, tree.shape, live_g, ever_g, prot)
+        per_cycle = tuple(leaf(name, tree.shape[1:], live_g[c], ever_g[c],
+                               prot) for c in range(stack))
         if all(s == per_cycle[0] for s in per_cycle):
             s = per_cycle[0]
             if s.mode in ("all", "none"):
                 return s
-            # identical slice pattern in every cycle: slice the stacked
-            # leaf directly (group axis shifts past the stack dim)
-            return SyncSpec("sliced", axis=s.axis + 1, live=s.live)
+            # identical pattern in every cycle: operate on the stacked
+            # leaf directly (partition axis shifts past the stack dim)
+            return SyncSpec(s.mode, axis=s.axis + 1, live=s.live,
+                            gather=s.gather, shards=s.shards)
+        if all(s.mode == "zero" for s in per_cycle):
+            # zero-vs-fallback is decided by (name, shape, cfg, k) alone,
+            # so cycles never mix zero and masked specs: stack the
+            # per-cycle masks under one shape-derived partition axis
+            return SyncSpec("zero_stacked", axis=per_cycle[0].axis + 1,
+                            shards=n_shards, per_cycle=per_cycle)
         return SyncSpec("stacked", per_cycle=per_cycle)
 
     return rec(block, None, False)
@@ -148,18 +235,44 @@ def _fill(tree, spec: SyncSpec):
     return spec
 
 
-def grad_sync_plan(params, cfg: ModelConfig, sched: Schedule):
+def _fill_zero(tree, cfg, k):
+    """Zero specs for loss-path leaves: fully live, fully gathered."""
+    if isinstance(tree, dict):
+        return {key: _fill_zero(v, cfg, k) for key, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return [_fill_zero(v, cfg, k) for v in tree]
+    one = np.ones(1, bool)
+    return _zero_leaf_spec("", tree.shape, one, one, cfg, True, k, True)
+
+
+def grad_sync_plan(params, cfg: ModelConfig, sched: Schedule, *,
+                   mode: str = "masked", n_shards: int = 0,
+                   ever_live: Optional[np.ndarray] = None,
+                   elide_gather: bool = True):
     """Mirror of the params tree with a SyncSpec at every leaf.
+
+    mode="masked" (default): the PR-3 masked-psum plan. mode="zero": the
+    ZeRO-1 plan (requires ``n_shards`` = data-mesh size); ``ever_live``
+    is an optional [L, G] bool of groups that were backward-live under any
+    earlier plan since the moments were last zero — their moments may be
+    non-zero, so their params must still be gathered; ``elide_gather=False``
+    (non-elidable optimizer, e.g. weight decay) forces a full gather mask.
 
     Static and host-side (numpy over the schedule table, shapes from the
     params/eval_shape tree) — baked into the jitted distributed step, so a
     new schedule means a new plan and a re-jit, exactly like the compaction
     bounds."""
     from repro.models.transformer import layer_groups
+    assert mode in ("masked", "zero"), mode
+    assert mode != "zero" or n_shards >= 1, "zero mode needs n_shards"
     live = backward_live_groups(sched)                       # [L, G]
+    ever = np.zeros_like(live) if ever_live is None \
+        else np.asarray(ever_live, bool)
+    assert ever.shape == live.shape, (ever.shape, live.shape)
     n_cycles, pat, rem = layer_groups(cfg)
     P = len(pat)
     assert live.shape[0] == cfg.n_layers, (live.shape, cfg.n_layers)
+    kw = dict(mode=mode, n_shards=n_shards, elide_gather=elide_gather)
     plan = {}
     for key, sub in params.items():
         if key == "cycles":
@@ -168,15 +281,19 @@ def grad_sync_plan(params, cfg: ModelConfig, sched: Schedule):
             plan[key] = [
                 _block_plan(sub[i],
                             live[[c * P + i for c in range(n_cycles)]],
-                            cfg, stack=n_cycles)
+                            cfg, stack=n_cycles,
+                            ever_g=ever[[c * P + i for c in range(n_cycles)]],
+                            **kw)
                 for i in range(P)]
         elif key == "rest":
-            plan[key] = [_block_plan(sub[i], live[n_cycles * P + i], cfg)
+            plan[key] = [_block_plan(sub[i], live[n_cycles * P + i], cfg,
+                                     ever_g=ever[n_cycles * P + i], **kw)
                          for i in range(len(sub))]
         else:
             # embed / unembed / final_norm / frontend_proj: gradients flow
             # through every sample's loss path — never skip.
-            plan[key] = _fill(sub, _ALL)
+            plan[key] = _fill_zero(sub, cfg, n_shards) if mode == "zero" \
+                else _fill(sub, _ALL)
     return plan
 
 
@@ -225,42 +342,339 @@ def apply_grad_sync(grads, plan, axis_name: str):
     return [apply_grad_sync(g, p, axis_name) for g, p in zip(grads, plan)]
 
 
+# --------------------------------------------------------- zero application
+def _is_zero(spec) -> bool:
+    return isinstance(spec, SyncSpec) and spec.mode in ("zero",
+                                                        "zero_stacked")
+
+
+def _zero_runs(spec: SyncSpec):
+    """Merge consecutive groups with equal (live, gather) into
+    (live, gather, start_group, stop_group) runs. Run boundaries define the
+    shard layout: for each run, device d owns its d-th sub-chunk, and the
+    device shard is the concatenation of those sub-chunks in run order."""
+    out = []
+    start = 0
+    n = len(spec.live)
+    for g in range(1, n + 1):
+        if g == n or (spec.live[g], spec.gather[g]) != \
+                (spec.live[start], spec.gather[start]):
+            out.append((spec.live[start], spec.gather[start], start, g))
+            start = g
+    return out
+
+
+def _map_zero(fn, tree_args, plan):
+    """Apply fn(leaf_args..., spec) over the (tree_args..., plan) lockstep
+    tree. zero_stacked leaves are lifted automatically: fn runs per cycle
+    on the unstacked slices with the per-cycle spec and the results are
+    re-stacked (spec-only calls — no tree_args — get the stacked spec
+    itself, whose ``axis`` already includes the cycle dim)."""
+    if isinstance(plan, SyncSpec):
+        if plan.mode == "zero_stacked" and tree_args:
+            return jnp.stack([fn(*[t[c] for t in tree_args], s)
+                              for c, s in enumerate(plan.per_cycle)])
+        return fn(*tree_args, plan)
+    if isinstance(plan, dict):
+        return {k: _map_zero(fn, [t[k] for t in tree_args], plan[k])
+                for k in plan}
+    return [_map_zero(fn, [t[i] for t in tree_args], p)
+            for i, p in enumerate(plan)]
+
+
+def _plan_leaves(tree, plan):
+    """Yield (leaf, spec) pairs of a (params-like tree, plan) in lockstep
+    — the one traversal all plan accounting shares."""
+    if isinstance(plan, SyncSpec):
+        yield tree, plan
+    elif isinstance(plan, dict):
+        for k in plan:
+            yield from _plan_leaves(tree[k], plan[k])
+    else:
+        for t, s in zip(tree, plan):
+            yield from _plan_leaves(t, s)
+
+
+def _zero_scatter_leaf(g, spec: SyncSpec, axis_name: str):
+    """Full local grad -> this device's reduced shard (pmean semantics).
+
+    Live runs reduce-scatter (the only cross-device bytes); dead runs are
+    identically zero everywhere, so the device's own sub-chunk is already
+    the global value and is sliced locally."""
+    if not _is_zero(spec):
+        return _sync_leaf(g, spec, axis_name)
+    k = spec.shards
+    gs = g.shape[spec.axis] // len(spec.live)
+    idx = jax.lax.axis_index(axis_name)
+    parts = []
+    for live, _, s, e in _zero_runs(spec):
+        seg = jax.lax.slice_in_dim(g, s * gs, e * gs, axis=spec.axis)
+        if live:
+            parts.append(jax.lax.psum_scatter(
+                seg, axis_name, scatter_dimension=spec.axis, tiled=True) / k)
+        else:
+            plen = (e - s) * gs // k
+            parts.append(jax.lax.dynamic_slice_in_dim(
+                seg, idx * plen, plen, axis=spec.axis))
+    return jnp.concatenate(parts, axis=spec.axis) if len(parts) > 1 \
+        else parts[0]
+
+
+def _zero_shard_leaf(x, spec: SyncSpec, axis_name: str):
+    """Replicated leaf -> this device's owned shard (no communication)."""
+    if not _is_zero(spec):
+        return x
+    gs = x.shape[spec.axis] // len(spec.live)
+    idx = jax.lax.axis_index(axis_name)
+    parts = []
+    for _, _, s, e in _zero_runs(spec):
+        plen = (e - s) * gs // spec.shards
+        seg = jax.lax.slice_in_dim(x, s * gs, e * gs, axis=spec.axis)
+        parts.append(jax.lax.dynamic_slice_in_dim(
+            seg, idx * plen, plen, axis=spec.axis))
+    return jnp.concatenate(parts, axis=spec.axis) if len(parts) > 1 \
+        else parts[0]
+
+
+def _zero_gather_leaf(u, old, spec: SyncSpec, axis_name: str):
+    """Updated shard + previous replicated leaf -> new replicated leaf.
+
+    Runs outside the gather mask kept their old params on every device
+    (zero grad, zero moments, elidable update — see module docstring)."""
+    if not _is_zero(spec):
+        return u
+    k = spec.shards
+    gs = old.shape[spec.axis] // len(spec.live)
+    off = 0
+    parts = []
+    for _, gather, s, e in _zero_runs(spec):
+        plen = (e - s) * gs // k
+        if gather:
+            piece = jax.lax.slice_in_dim(u, off, off + plen, axis=spec.axis)
+            parts.append(jax.lax.all_gather(piece, axis_name,
+                                            axis=spec.axis, tiled=True))
+        else:
+            parts.append(jax.lax.slice_in_dim(old, s * gs, e * gs,
+                                              axis=spec.axis))
+        off += plen
+    return jnp.concatenate(parts, axis=spec.axis) if len(parts) > 1 \
+        else parts[0]
+
+
+def apply_zero_scatter(grads, plan, axis_name: str):
+    """Local grads tree -> mixed tree: reduced shards at zero leaves,
+    masked-pmean full leaves elsewhere. Must run inside shard_map."""
+    return _map_zero(lambda g, s: _zero_scatter_leaf(g, s, axis_name),
+                     [grads], plan)
+
+
+def zero_shard_params(params, plan, axis_name: str):
+    """Replicated params tree -> this device's owned shards (zero leaves)
+    with non-partitioned leaves passed through."""
+    return _map_zero(lambda x, s: _zero_shard_leaf(x, s, axis_name),
+                     [params], plan)
+
+
+def apply_zero_gather(updated, old_params, plan, axis_name: str):
+    """Updated shard tree + previous replicated params -> new replicated
+    params; only runs in the gather mask move bytes."""
+    return _map_zero(lambda u, o, s: _zero_gather_leaf(u, o, s, axis_name),
+                     [updated, old_params], plan)
+
+
+def zero_norm_sq(grads, plan):
+    """(shard_sq, full_sq): squared-norm contributions of a mixed grads
+    tree. ``shard_sq`` sums zero-leaf shards (disjoint across devices — a
+    scalar psum completes them); ``full_sq`` sums the replicated masked
+    leaves, identical on every device."""
+    shard_sq = jnp.zeros((), jnp.float32)
+    full_sq = jnp.zeros((), jnp.float32)
+    for g, spec in _plan_leaves(grads, plan):
+        sq = jnp.sum(g.astype(jnp.float32) ** 2)
+        if _is_zero(spec):
+            shard_sq = shard_sq + sq
+        else:
+            full_sq = full_sq + sq
+    return shard_sq, full_sq
+
+
+def zero_param_specs(plan, axis_name: str):
+    """PartitionSpec tree for the sharded moment leaves: the partition axis
+    is sharded over ``axis_name`` for zero leaves, replicated otherwise.
+    The global array layout is the concatenation of device shards (each the
+    run-ordered sub-chunks of ``_zero_runs``) along the partition axis."""
+    from jax.sharding import PartitionSpec as P
+
+    def leaf(spec):
+        if _is_zero(spec):
+            return P(*([None] * spec.axis + [axis_name]))
+        return P()
+
+    return _map_zero(leaf, [], plan)
+
+
 # --------------------------------------------------------------- accounting
+def _mask_fraction(mask: Tuple[bool, ...]) -> float:
+    return float(sum(mask)) / len(mask) if mask else 0.0
+
+
 def _live_fraction(spec: SyncSpec) -> float:
     if spec.mode == "all":
         return 1.0
     if spec.mode == "none":
         return 0.0
-    if spec.mode == "stacked":
+    if spec.mode in ("stacked", "zero_stacked"):
         return float(np.mean([_live_fraction(s) for s in spec.per_cycle]))
-    return float(sum(spec.live)) / len(spec.live)
+    return _mask_fraction(spec.live)
 
 
-def sync_byte_report(plan, params) -> dict:
-    """Price the plan: bytes entering the gradient all-reduce vs a full
-    pmean of every leaf. Works on concrete arrays or ShapeDtypeStructs."""
-    totals = {"total_bytes": 0.0, "synced_bytes": 0.0, "n_leaves": 0,
-              "n_skipped": 0, "n_sliced": 0}
+def _gather_fraction(spec: SyncSpec) -> float:
+    if spec.mode == "zero":
+        return _mask_fraction(spec.gather)
+    if spec.mode == "zero_stacked":
+        return float(np.mean([_gather_fraction(s) for s in spec.per_cycle]))
+    return 0.0
 
-    def rec(p, spec):
-        if isinstance(spec, SyncSpec):
-            size = float(np.prod(p.shape)) * np.dtype(p.dtype).itemsize
-            totals["total_bytes"] += size
-            totals["synced_bytes"] += size * _live_fraction(spec)
-            totals["n_leaves"] += 1
-            if spec.mode == "none":
-                totals["n_skipped"] += 1
-            elif spec.mode in ("sliced", "stacked"):
-                totals["n_sliced"] += 1
-            return
-        if isinstance(spec, dict):
-            for k in spec:
-                rec(p[k], spec[k])
-        else:
-            for pi, si in zip(p, spec):
-                rec(pi, si)
 
-    rec(params, plan)
+def sync_byte_report(plan, params, n_shards: Optional[int] = None) -> dict:
+    """Price the plan. Works on concrete arrays or ShapeDtypeStructs.
+
+    Masked leaves contribute live bytes to ``ar_bytes`` (all-reduce); zero
+    leaves contribute scatter-live bytes to ``rs_bytes`` (reduce-scatter)
+    and gather-mask bytes to ``ag_bytes`` (all-gather). ``synced_bytes``
+    keeps the PR-3 meaning of all-reduce-*equivalent* bytes — a zero
+    leaf's RS + AG pair counts as the mean of the two masks, so
+    ``fraction`` stays comparable across modes. With ``n_shards`` the
+    report adds ``wire``: per-device ring traffic by collective
+    (2·(k-1)/k per all-reduce byte, (k-1)/k per RS/AG byte), the number
+    the HLO-parsed ``launch.hlo.collective_bytes`` should reproduce."""
+    totals = {"total_bytes": 0.0, "synced_bytes": 0.0, "ar_bytes": 0.0,
+              "rs_bytes": 0.0, "ag_bytes": 0.0, "n_leaves": 0,
+              "n_skipped": 0, "n_sliced": 0, "n_zero": 0}
+    for p, spec in _plan_leaves(params, plan):
+        size = float(np.prod(p.shape)) * np.dtype(p.dtype).itemsize
+        totals["total_bytes"] += size
+        totals["n_leaves"] += 1
+        if _is_zero(spec):
+            rs, ag = _live_fraction(spec), _gather_fraction(spec)
+            totals["rs_bytes"] += size * rs
+            totals["ag_bytes"] += size * ag
+            totals["synced_bytes"] += size * (rs + ag) / 2.0
+            totals["n_zero"] += 1
+            continue
+        totals["ar_bytes"] += size * _live_fraction(spec)
+        totals["synced_bytes"] += size * _live_fraction(spec)
+        if spec.mode == "none":
+            totals["n_skipped"] += 1
+        elif spec.mode in ("sliced", "stacked"):
+            totals["n_sliced"] += 1
     totals["fraction"] = (totals["synced_bytes"] / totals["total_bytes"]
                           if totals["total_bytes"] else 1.0)
+    if n_shards is not None and n_shards > 1:
+        k = n_shards
+        wire = {
+            "all_reduce": 2.0 * (k - 1) / k * totals["ar_bytes"],
+            "reduce_scatter": (k - 1) / k * totals["rs_bytes"],
+            "all_gather": (k - 1) / k * totals["ag_bytes"],
+        }
+        wire["total"] = sum(wire.values())
+        totals["wire"] = wire
     return totals
+
+
+def zero_state_byte_report(plan, params, n_shards: int,
+                           n_moments: int = 1) -> dict:
+    """Per-device optimizer-moment memory under the plan's partition.
+
+    Zero leaves keep 1/k of each moment copy per device; fallback (masked)
+    leaves stay replicated. ``fraction`` is per-device bytes over the
+    replicated baseline — the ZeRO-1 memory claim."""
+    totals = {"replicated_bytes": 0.0, "per_device_bytes": 0.0,
+              "n_partitioned": 0, "n_replicated": 0}
+    for p, spec in _plan_leaves(params, plan):
+        size = float(np.prod(p.shape)) * np.dtype(p.dtype).itemsize
+        totals["replicated_bytes"] += size
+        if _is_zero(spec):
+            totals["per_device_bytes"] += size / n_shards
+            totals["n_partitioned"] += 1
+        else:
+            totals["per_device_bytes"] += size
+            totals["n_replicated"] += 1
+    for key in ("replicated_bytes", "per_device_bytes"):
+        totals[key] *= n_moments
+    totals["n_shards"] = n_shards
+    totals["fraction"] = (totals["per_device_bytes"]
+                          / totals["replicated_bytes"]
+                          if totals["replicated_bytes"] else 1.0)
+    return totals
+
+
+# ----------------------------------------------- layout / state resharding
+def _zero_layout_perm(spec: SyncSpec, axis_len: int) -> np.ndarray:
+    """perm[i] = canonical axis index held at position i of the global
+    shard-concatenated layout (device-major, runs in order, d-th sub-chunk
+    of each run per device). A bijection over range(axis_len)."""
+    k = spec.shards
+    gs = axis_len // len(spec.live)
+    perm = np.empty(axis_len, np.int64)
+    pos = 0
+    for d in range(k):
+        for _, _, s, e in _zero_runs(spec):
+            plen = (e - s) * gs // k
+            start = s * gs + d * plen
+            perm[pos:pos + plen] = np.arange(start, start + plen)
+            pos += plen
+    assert pos == axis_len
+    return perm
+
+
+def _leaf_to_canonical(x: np.ndarray, spec: SyncSpec) -> np.ndarray:
+    """Global shard-layout array -> canonical element order (numpy)."""
+    if spec.mode == "zero_stacked":
+        return np.stack([_leaf_to_canonical(x[c], s)
+                         for c, s in enumerate(spec.per_cycle)])
+    if not _is_zero(spec):
+        return x
+    perm = _zero_layout_perm(spec, x.shape[spec.axis])
+    out = np.empty_like(x)
+    idx = [slice(None)] * x.ndim
+    idx[spec.axis] = perm
+    out[tuple(idx)] = x
+    return out
+
+
+def _leaf_from_canonical(x: np.ndarray, spec: SyncSpec) -> np.ndarray:
+    """Canonical array -> the global shard-concatenated layout (numpy)."""
+    if spec.mode == "zero_stacked":
+        return np.stack([_leaf_from_canonical(x[c], s)
+                         for c, s in enumerate(spec.per_cycle)])
+    if not _is_zero(spec):
+        return x
+    perm = _zero_layout_perm(spec, x.shape[spec.axis])
+    return np.take(x, perm, axis=spec.axis)
+
+
+def zero_reshard(tree, old_plan, new_plan):
+    """Re-layout a moments tree from one plan's shard layout to another's
+    (host-side numpy; used when a schedule refresh changes the plan).
+    Either plan may be None, meaning canonical/replicated layout — so this
+    also converts masked <-> zero optimizer state."""
+    def rec(x, old_s, new_s):
+        if isinstance(x, (dict,)):
+            return {k: rec(x[k],
+                           old_s[k] if old_s is not None else None,
+                           new_s[k] if new_s is not None else None)
+                    for k in x}
+        if isinstance(x, (list, tuple)):
+            return [rec(xi,
+                        old_s[i] if old_s is not None else None,
+                        new_s[i] if new_s is not None else None)
+                    for i, xi in enumerate(x)]
+        arr = np.asarray(x)
+        if old_s is not None:
+            arr = _leaf_to_canonical(arr, old_s)
+        if new_s is not None:
+            arr = _leaf_from_canonical(arr, new_s)
+        return jnp.asarray(arr)
+
+    return rec(tree, old_plan, new_plan)

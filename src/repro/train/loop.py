@@ -22,7 +22,8 @@ from repro.core.scores import compute_scores, transformer_blocks, vit_blocks
 from repro.data.synthetic import microbatch_assignment
 from repro.models.transformer import lm_loss
 from repro.models.vit import ViTConfig, vit_loss
-from repro.optim.optimizers import Optimizer, clip_by_global_norm
+from repro.optim.optimizers import (Optimizer, clip_by_global_norm,
+                                    clip_scale)
 
 
 @dataclass
@@ -147,41 +148,78 @@ def finetune(params, cfg: ModelConfig, d2: Optional[D2FTConfig],
 
 
 # ----------------------------------------------------------- distributed path
+def _zero_state_specs(opt_state_shapes, plan, axis_name: str):
+    """PartitionSpec tree for the optimizer state: params-shaped subtrees
+    (same treedef as the plan — moments, EMA copies, anything updated
+    leafwise from grad/param shards) get the plan's partition specs,
+    everything else (step counters, fallback scalars) stays replicated.
+    Callers must hand such subtrees over in the plan's shard layout
+    (``sharding.sync.zero_reshard``; zero-init moments are
+    layout-invariant)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.sync import SyncSpec, zero_param_specs
+
+    pspecs = zero_param_specs(plan, axis_name)
+    plan_def = jax.tree.structure(plan,
+                                  is_leaf=lambda x: isinstance(x, SyncSpec))
+    return {
+        k: pspecs if jax.tree.structure(v) == plan_def
+        else jax.tree.map(lambda _: P(), v)
+        for k, v in opt_state_shapes.items()
+    }
+
+
 def make_distributed_train_step(cfg: ModelConfig, opt: Optimizer, mesh,
                                 sync_plan, *, clip: float = 1.0,
                                 use_kernel: bool = False, live_bounds=None,
-                                axis_name: str = "data"):
+                                axis_name: str = "data",
+                                sync_mode: str = "masked", params=None):
     """shard_map data-parallel gated train step (paper's *distributed* D2FT).
 
     Each device runs the masked/kernel gated path on its shard of the batch
     — its multiple-knapsack-assigned micro-batches after
     ``core.assignment.device_sample_order`` reordering — then gradients are
-    combined with ``sharding.sync.apply_grad_sync``: only parameters with a
-    live backward somewhere in the schedule enter the pmean; p_o/p_s-only
-    subnets contribute identically-zero grads on every device and their
-    psum is elided (the measured comm saving).
+    combined per ``sync_mode``:
+
+    * ``"masked"`` — ``sharding.sync.apply_grad_sync``: only parameters
+      with a live backward somewhere in the schedule enter the pmean;
+      p_o/p_s-only subnets contribute identically-zero grads on every
+      device and their psum is elided. Params and optimizer state stay
+      replicated.
+    * ``"zero"`` — ZeRO-1: live runs are reduce-scattered, each device
+      updates only its owned param shard with its shard of the optimizer
+      moments (per-device moment memory ~1/n_devices), then updated params
+      are all-gathered under the plan's gather mask. Requires a zero-mode
+      ``sync_plan`` (``grad_sync_plan(mode="zero", n_shards=...)``) and
+      ``params`` (a template for the optimizer-state structure); the
+      returned step expects/returns the optimizer state in the plan's
+      shard layout (``sharding.sync.zero_reshard`` converts).
 
     sync_plan: per-leaf SyncSpec tree from ``sharding.sync.grad_sync_plan``.
     live_bounds: static per-device (live_fwd, live_bwd) compaction bounds
     (``core.assignment.distributed_live_bounds``) — each device dispatches
     only its local shard's live slices through the gated kernels.
-    Returns jitted step(params, opt_state, batch, gates) with params /
-    opt_state replicated, batch sharded on the leading axis and gates
-    [L, B, G] sharded on the sample axis.
+    Returns jitted step(params, opt_state, batch, gates) with params
+    replicated, batch sharded on the leading axis and gates [L, B, G]
+    sharded on the sample axis.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    from repro.sharding.sync import apply_grad_sync
+    from repro.sharding.sync import (apply_grad_sync, apply_zero_gather,
+                                     apply_zero_scatter, zero_norm_sq,
+                                     zero_shard_params)
 
-    def local_step(params, opt_state, batch, gates):
-        def loss_of(p):
+    def loss_of(params, batch, gates):
+        def fn(p):
             return lm_loss(p, cfg, batch.get("tokens"), batch["labels"],
                            features=batch.get("features"), gates=gates,
                            use_kernel=use_kernel, live_bounds=live_bounds)
+        return jax.value_and_grad(fn, has_aux=True)(params)
 
-        (loss, metrics), grads = jax.value_and_grad(
-            loss_of, has_aux=True)(params)
+    def local_step(params, opt_state, batch, gates):
+        (loss, metrics), grads = loss_of(params, batch, gates)
         grads = apply_grad_sync(grads, sync_plan, axis_name)
         loss = jax.lax.pmean(loss, axis_name)
         metrics = {k: jax.lax.pmean(v, axis_name) for k, v in metrics.items()}
@@ -191,49 +229,151 @@ def make_distributed_train_step(cfg: ModelConfig, opt: Optimizer, mesh,
         params, opt_state = opt.update(grads, opt_state, params)
         return params, opt_state, dict(metrics, loss=loss, grad_norm=gnorm)
 
+    def local_step_zero(params, opt_state, batch, gates):
+        (loss, metrics), grads = loss_of(params, batch, gates)
+        # mixed tree: reduced shards at zero leaves (live runs
+        # reduce-scattered, dead runs locally sliced), masked pmean
+        # elsewhere
+        gsync = apply_zero_scatter(grads, sync_plan, axis_name)
+        loss = jax.lax.pmean(loss, axis_name)
+        metrics = {k: jax.lax.pmean(v, axis_name) for k, v in metrics.items()}
+        # global grad norm: zero-leaf shards tile their tensors disjointly
+        # across devices, so one scalar psum completes their square sum;
+        # fallback leaves are replicated and added locally
+        shard_sq, full_sq = zero_norm_sq(gsync, sync_plan)
+        gnorm = jnp.sqrt(jax.lax.psum(shard_sq, axis_name) + full_sq)
+        scale = clip_scale(gnorm, clip)
+        gsync = jax.tree.map(lambda g: g * scale, gsync)
+        # each device updates only its owned shard (moments arrive sharded
+        # through in_specs); the schedule-masked all-gather re-replicates
+        # exactly the runs whose params can have changed
+        pshard = zero_shard_params(params, sync_plan, axis_name)
+        new_shard, opt_state = opt.update(gsync, opt_state, pshard)
+        params = apply_zero_gather(new_shard, params, sync_plan, axis_name)
+        return params, opt_state, dict(metrics, loss=loss, grad_norm=gnorm)
+
     # check_rep=False: skipped (dead-subnet) grad leaves are device-invariant
     # — identically zero everywhere — but shard_map's replication tracker
     # cannot prove that through an elided psum.
+    if sync_mode == "masked":
+        state_specs = P()
+        body = local_step
+    elif sync_mode == "zero":
+        assert params is not None, "zero mode needs a params template"
+        state_shapes = jax.eval_shape(opt.init, params)
+        state_specs = _zero_state_specs(state_shapes, sync_plan, axis_name)
+        body = local_step_zero
+    else:
+        raise ValueError(f"unknown sync_mode {sync_mode!r}")
     step = shard_map(
-        local_step, mesh=mesh,
-        in_specs=(P(), P(), P(axis_name),
+        body, mesh=mesh,
+        in_specs=(P(), state_specs, P(axis_name),
                   (P(None, axis_name), P(None, axis_name))),
-        out_specs=(P(), P(), P()),
+        out_specs=(P(), state_specs, P()),
         check_rep=False)
     return jax.jit(step)
+
+
+def _reshard_opt_state(opt_state, old_plan, new_plan):
+    """Re-layout params-shaped state subtrees between zero-plan shard
+    layouts; either plan may be None for canonical order (host-side;
+    identity for masked plans and non-params-shaped state)."""
+    from repro.sharding.sync import SyncSpec, zero_reshard
+    ref = new_plan if new_plan is not None else old_plan
+    if ref is None:
+        return opt_state
+    plan_def = jax.tree.structure(
+        ref, is_leaf=lambda x: isinstance(x, SyncSpec))
+    return {
+        k: zero_reshard(v, old_plan, new_plan)
+        if jax.tree.structure(v) == plan_def else v
+        for k, v in opt_state.items()
+    }
 
 
 def finetune_distributed(params, cfg: ModelConfig, d2: D2FTConfig,
                          opt: Optimizer, batches: Iterable, *, steps: int,
                          mesh, use_kernel: bool = False, clip: float = 1.0,
+                         sync_mode: str = "masked",
+                         refresh_every: Optional[int] = None,
                          log: Optional[TrainLog] = None) -> tuple:
-    """Distributed D2FT fine-tuning: plan once, balance micro-batches over
-    the mesh's data axis with the multiple-knapsack assigner, then drive
-    the shard_map gated step. The rebalance report and the sync-plan byte
-    report land in ``log.extras``."""
+    """Distributed D2FT fine-tuning: plan, balance micro-batches over the
+    mesh's data axis with the multiple-knapsack assigner, then drive the
+    shard_map gated step. ``refresh_every=k`` re-plans the schedule every k
+    steps from fresh scores — and re-runs the knapsack assigner, rebuilds
+    the sync plan and (zero mode) reshards the optimizer moments, since an
+    assignment balanced for a stale schedule un-balances the new one. The
+    latest rebalance/sync reports land in ``log.extras`` and every refresh
+    is appended to ``log.extras["refreshes"]``.
+
+    sync_mode="zero" runs the ZeRO-1 sync (sliced reduce-scatter +
+    schedule-masked all-gather, optimizer moments sharded ~1/n_devices);
+    the gather elision engages only for ``opt.elidable`` optimizers and
+    groups that have never been backward-live since their moments were
+    zero (tracked here as ``ever_live``). The returned opt_state is in
+    canonical element order regardless of sync_mode (the in-loop shard
+    layout is converted back on return), so it checkpoints/resumes on any
+    path."""
     from repro.core.assignment import (device_sample_order,
                                        distributed_live_bounds,
                                        plan_device_assignment)
-    from repro.sharding.sync import grad_sync_plan, sync_byte_report
+    from repro.core.schedule import op_counts
+    from repro.sharding.sync import (backward_live_groups, grad_sync_plan,
+                                     sync_byte_report)
 
     log = log or TrainLog()
     opt_state = opt.init(params)
     ndev = mesh.shape["data"]
+    assert sync_mode in ("masked", "zero"), sync_mode
     sched = assignment = sync_plan = step_fn = None
+    ever_live = None
+
+    def replan(batch):
+        from repro.data.synthetic import split_microbatches
+        nonlocal ever_live
+        mbs = split_microbatches(batch, d2.n_microbatches)
+        sched = plan_from_scores(
+            cfg, d2, params, mbs,
+            lambda p, mb: lm_loss(p, cfg, mb.get("tokens"), mb["labels"],
+                                  features=mb.get("features"))[0])
+        assignment, report = plan_device_assignment(sched, ndev)
+        if sync_mode == "zero":
+            prior = ever_live
+            if ever_live is None:
+                ever_live = np.zeros((cfg.n_layers, sched.n_groups), bool)
+            sync_plan = grad_sync_plan(
+                params, cfg, sched, mode="zero", n_shards=ndev,
+                ever_live=prior, elide_gather=opt.elidable)
+            ever_live = ever_live | backward_live_groups(sched)
+        else:
+            sync_plan = grad_sync_plan(params, cfg, sched)
+        record = {
+            "rebalance": report,
+            "sync": sync_byte_report(sync_plan, params, n_shards=ndev),
+            "op_counts": op_counts(sched),
+            "device_of": [int(x) for x in assignment.device_of],
+        }
+        return sched, assignment, sync_plan, record
+
     for i, batch in enumerate(batches):
         if i >= steps:
             break
-        if sched is None:
-            from repro.data.synthetic import split_microbatches
-            mbs = split_microbatches(batch, d2.n_microbatches)
-            sched = plan_from_scores(
-                cfg, d2, params, mbs,
-                lambda p, mb: lm_loss(p, cfg, mb.get("tokens"), mb["labels"],
-                                      features=mb.get("features"))[0])
-            assignment, report = plan_device_assignment(sched, ndev)
-            sync_plan = grad_sync_plan(params, cfg, sched)
-            log.extras["rebalance"] = report
-            log.extras["sync"] = sync_byte_report(sync_plan, params)
+        if sched is None or (refresh_every and i % refresh_every == 0
+                             and i > 0):
+            old_plan = sync_plan
+            sched, assignment, sync_plan, record = replan(batch)
+            if sync_mode == "zero":
+                # canonical -> shard layout at the first plan (zeros are
+                # layout-invariant, but a params-shaped state initialized
+                # from values, e.g. an EMA copy, is not), then between
+                # layouts on refresh
+                opt_state = _reshard_opt_state(opt_state, old_plan,
+                                               sync_plan)
+            record["step"] = i
+            log.extras["rebalance"] = record["rebalance"]
+            log.extras["sync"] = record["sync"]
+            log.extras.setdefault("refreshes", []).append(record)
+            step_fn = None
         B = batch["labels"].shape[0]
         mb_of = microbatch_assignment(B, d2.n_microbatches)
         perm = device_sample_order(assignment, mb_of)
@@ -244,13 +384,18 @@ def finetune_distributed(params, cfg: ModelConfig, d2: D2FTConfig,
                 if use_kernel else None
             step_fn = make_distributed_train_step(
                 cfg, opt, mesh, sync_plan, clip=clip,
-                use_kernel=use_kernel, live_bounds=bounds)
+                use_kernel=use_kernel, live_bounds=bounds,
+                sync_mode=sync_mode, params=params)
         t0 = time.perf_counter()
         params, opt_state, metrics = step_fn(params, opt_state, batch, gates)
         jax.block_until_ready(metrics["loss"])
         log.step_times.append(time.perf_counter() - t0)
         log.losses.append(float(metrics["loss"]))
         log.metrics.append({k: float(v) for k, v in metrics.items()})
+    if sync_mode == "zero" and sync_plan is not None:
+        # hand back canonical element order: the shard layout is an
+        # internal representation a checkpoint or another path must not see
+        opt_state = _reshard_opt_state(opt_state, sync_plan, None)
     return params, opt_state, log
 
 

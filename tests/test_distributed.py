@@ -7,16 +7,19 @@ import subprocess
 import sys
 
 import numpy as np
+import pytest
 
 import jax
 
 from repro.configs.base import ModelConfig
 from repro.core.schedule import P_F, P_O, P_S, Schedule
-from repro.launch.diststep import all_pf_schedule, paper_mix_schedule
+from repro.launch.diststep import (all_pf_schedule, paper_mix_schedule,
+                                   uniform_half_schedule)
 from repro.models.transformer import init_model
 from repro.sharding.sync import (SyncSpec, apply_grad_sync,
                                  backward_live_groups, grad_sync_plan,
-                                 sync_byte_report)
+                                 sync_byte_report, zero_reshard,
+                                 zero_state_byte_report)
 
 CFG = ModelConfig(name="sync", arch_type="dense", n_layers=4, d_model=64,
                   n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=256)
@@ -101,6 +104,213 @@ def test_apply_grad_sync_structure_single_device():
     for a, b in zip(jax.tree.leaves(fake_grads), jax.tree.leaves(out)):
         assert a.shape == b.shape
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -------------------------------------------------------- HLO byte parser
+def test_collective_bytes_group_size_forms():
+    """collective_bytes reads the group size from explicit-list, iota and
+    async-pair (`-start` carries the attribute, `-done` the array shape)
+    prints, and falls back to default_group_size on the empty print."""
+    from repro.launch.hlo import collective_bytes
+
+    explicit = ("%ar = f32[100]{0} all-reduce(f32[100] %x), channel_id=1, "
+                "replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%sum")
+    iota = ("%rs = f32[100]{0} reduce-scatter(f32[800] %x), channel_id=2, "
+            "replica_groups=[1,8]<=[8], dimensions={0}, to_apply=%sum")
+    async_pair = (
+        "%ag-start = (f32[100], f32[800]) all-gather-start(f32[100] %x), "
+        "channel_id=3, replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}\n"
+        "%ag-done = f32[800]{0} all-gather-done("
+        "(f32[100], f32[800]) %ag-start), channel_id=3")
+    empty = ("%ar2 = f32[100]{0} all-reduce(f32[100] %x), channel_id=4, "
+             "replica_groups={}, to_apply=%sum")
+    got = collective_bytes("\n".join([explicit, iota, async_pair]))
+    assert got["all-reduce"] == pytest.approx(2 * 7 / 8 * 400)
+    assert got["reduce-scatter"] == pytest.approx(7 * 400)
+    assert got["all-gather"] == pytest.approx(7 / 8 * 3200)
+    assert collective_bytes(empty, default_group_size=8)["all-reduce"] \
+        == pytest.approx(2 * 7 / 8 * 400)
+
+
+# ------------------------------------------------------------- ZeRO plans
+def _spec_leaves(plan):
+    return jax.tree.leaves(plan, is_leaf=lambda x: isinstance(x, SyncSpec))
+
+
+def test_zero_plan_modes_and_masks():
+    params = _params()
+    plan = grad_sync_plan(params, CFG, _mixed_schedule(), mode="zero",
+                          n_shards=8)
+    specs = _spec_leaves(plan)
+    assert all(isinstance(s, SyncSpec) for s in specs)
+    # every leaf of this config splits evenly over 8 shards -> all zero
+    assert all(s.mode in ("zero", "zero_stacked") for s in specs)
+    # loss-path leaves: fully scattered and gathered
+    emb = plan["embed"]["table"]
+    assert emb.mode == "zero" and all(emb.live) and all(emb.gather)
+    # stacked attention weights: per-cycle masks follow the layers
+    wq = plan["cycles"][0]["attn"]["wq"]
+    assert wq.mode == "zero_stacked" and len(wq.per_cycle) == 4
+    assert not any(wq.per_cycle[0].live)      # layer 0: p_o only, no scatter
+    assert all(wq.per_cycle[2].live)          # layer 2: fully live
+    # gather mask covers the scatter mask everywhere
+    for s in specs:
+        for sub in (s.per_cycle or (s,)):
+            if sub.mode == "zero":
+                assert all(g or not l
+                           for l, g in zip(sub.live, sub.gather))
+
+
+def test_zero_plan_ever_live_and_decay_force_gather():
+    params = _params()
+    sched = _mixed_schedule()
+    # a group that was live under an earlier plan keeps its gather bit even
+    # when now dead (its moments may be non-zero)
+    ever = np.ones((L, G), bool)
+    plan = grad_sync_plan(params, CFG, sched, mode="zero", n_shards=8,
+                          ever_live=ever)
+    for s in _spec_leaves(plan):
+        for sub in (s.per_cycle or (s,)):
+            if sub.mode == "zero":
+                assert all(sub.gather), sub
+    # a non-elidable optimizer (weight decay) forces the same dense gather
+    plan = grad_sync_plan(params, CFG, sched, mode="zero", n_shards=8,
+                          elide_gather=False)
+    for s in _spec_leaves(plan):
+        for sub in (s.per_cycle or (s,)):
+            if sub.mode == "zero":
+                assert all(sub.gather), sub
+
+
+def test_zero_plan_indivisible_falls_back_to_masked():
+    """n_shards that divides no axis degrades every leaf to its masked
+    spec (replicated moments, pmean sync) — never a crash."""
+    params = _params()
+    sched = _mixed_schedule()
+    plan7 = grad_sync_plan(params, CFG, sched, mode="zero", n_shards=7)
+    masked = grad_sync_plan(params, CFG, sched)
+    assert plan7 == masked
+
+
+def test_zero_wire_model_matches_masked_psum():
+    """Ring physics: reduce-scatter + all-gather of the live runs costs
+    exactly what the masked all-reduce of the same runs costs."""
+    params = _params()
+    for sched in (_mixed_schedule(),
+                  paper_mix_schedule(L, G, N, (0.4, 0.3, 0.3), 0),
+                  uniform_half_schedule(L, G, N)):
+        masked = sync_byte_report(grad_sync_plan(params, CFG, sched),
+                                  params, n_shards=8)
+        zero = sync_byte_report(
+            grad_sync_plan(params, CFG, sched, mode="zero", n_shards=8),
+            params, n_shards=8)
+        assert zero["wire"]["total"] == \
+            pytest.approx(masked["wire"]["total"], rel=1e-9)
+        assert zero["fraction"] == pytest.approx(masked["fraction"],
+                                                 rel=1e-9)
+
+
+def test_uniform_half_schedule_no_whole_subnet_elision():
+    """The uniformly spread 50%-live schedule: every layer partially live,
+    so the masked plan's whole-subnet elision (`none`) never fires yet the
+    sliced/zero run masks still price below the full sync."""
+    params = _params()
+    sched = uniform_half_schedule(L, G, N)
+    live = backward_live_groups(sched)
+    assert live.any(axis=1).all() and not live.all(axis=1).any()
+    rep = sync_byte_report(grad_sync_plan(params, CFG, sched), params)
+    assert rep["n_skipped"] == 0
+    assert rep["fraction"] < 1.0
+
+
+def test_zero_state_memory_fraction():
+    """Acceptance: per-device optimizer-moment bytes under the ZeRO
+    partition are <= 1/n_devices + slack of the replicated baseline."""
+    params = _params()
+    for sched in (paper_mix_schedule(L, G, N, (0.4, 0.3, 0.3), 0),
+                  all_pf_schedule(L, G, N)):
+        plan = grad_sync_plan(params, CFG, sched, mode="zero", n_shards=8)
+        rep = zero_state_byte_report(plan, params, 8, n_moments=2)
+        assert rep["fraction"] <= 1.0 / 8 + 0.05, rep
+        assert rep["n_partitioned"] > 0
+        # doubling the moment copies (adam m+v vs sgd mu) scales both sides
+        assert rep["replicated_bytes"] == pytest.approx(
+            2 * zero_state_byte_report(plan, params, 8)["replicated_bytes"])
+
+
+def test_zero_reshard_roundtrip_and_cross_plan():
+    """Shard-layout -> canonical -> shard-layout is exact, and resharding
+    between two different plans preserves every element (pure
+    permutations)."""
+    params = _params()
+    plan_a = grad_sync_plan(params, CFG, _mixed_schedule(), mode="zero",
+                            n_shards=8)
+    plan_b = grad_sync_plan(params, CFG,
+                            paper_mix_schedule(L, G, N, (0.4, 0.3, 0.3), 0),
+                            mode="zero", n_shards=8)
+    tree = jax.tree.map(
+        lambda a: jax.random.normal(jax.random.PRNGKey(1), a.shape), params)
+    canon = zero_reshard(tree, plan_a, None)
+    back = zero_reshard(canon, None, plan_a)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    crossed = zero_reshard(zero_reshard(tree, plan_a, plan_b), plan_b,
+                           plan_a)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(crossed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # permutation property: sorted content identical in any layout
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(canon)):
+        np.testing.assert_array_equal(np.sort(np.asarray(a), axis=None),
+                                      np.sort(np.asarray(b), axis=None))
+
+
+# ------------------------------------------ refresh re-planning regression
+def test_assignment_changes_with_schedule():
+    """Regression (ROADMAP "keeps one assignment"): the knapsack assigner
+    must be re-run per schedule refresh — different schedules produce
+    different micro-batch placements."""
+    from repro.core.assignment import plan_device_assignment
+    a1, _ = plan_device_assignment(
+        paper_mix_schedule(L, G, 16, (0.4, 0.3, 0.3), seed=0), 4)
+    a2, _ = plan_device_assignment(
+        paper_mix_schedule(L, G, 16, (0.4, 0.3, 0.3), seed=3), 4)
+    assert not np.array_equal(a1.device_of, a2.device_of), \
+        "re-assignment is a no-op for a changed schedule"
+    # determinism: replanning the same schedule is a no-op
+    a3, _ = plan_device_assignment(
+        paper_mix_schedule(L, G, 16, (0.4, 0.3, 0.3), seed=0), 4)
+    assert np.array_equal(a1.device_of, a3.device_of)
+
+
+def test_finetune_distributed_replans_per_refresh():
+    """finetune_distributed(refresh_every=k) re-plans schedule AND device
+    assignment every k steps (one refresh record per replan, each carrying
+    a fresh assignment), in both sync modes."""
+    from repro.configs.base import D2FTConfig
+    from repro.data.synthetic import lm_batches
+    from repro.launch.mesh import make_data_mesh
+    from repro.optim.optimizers import sgd
+    from repro.train.loop import finetune_distributed
+
+    cfg = ModelConfig(name="refresh", arch_type="dense", n_layers=2,
+                      d_model=32, n_heads=4, n_kv_heads=4, d_ff=64,
+                      vocab_size=128)
+    d2 = D2FTConfig(n_microbatches=4, n_pf=2, n_po=1,
+                    head_groups=cfg.n_heads)
+    mesh = make_data_mesh(1)
+    for sync_mode in ("masked", "zero"):
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        batches = lm_batches(0, cfg.vocab_size, 8, 8, 5)
+        _, _, log = finetune_distributed(
+            params, cfg, d2, sgd(1e-2), batches, steps=5, mesh=mesh,
+            sync_mode=sync_mode, refresh_every=2)
+        refreshes = log.extras["refreshes"]
+        assert [r["step"] for r in refreshes] == [0, 2, 4]
+        for r in refreshes:
+            assert len(r["device_of"]) == d2.n_microbatches
+            assert "rebalance" in r and "sync" in r
+        assert len(log.losses) == 5
+        assert all(np.isfinite(v) for v in log.losses)
 
 
 def test_distributed_parity_8dev_subprocess():

@@ -1,0 +1,126 @@
+"""Property-based invariants for the sync plan and the device assigner
+(hypothesis; skipped cleanly when it is not installed — CI installs it via
+requirements.txt, see conftest.optional_hypothesis).
+
+* ``grad_sync_plan`` covers every param leaf exactly once, whatever the
+  schedule, in both masked and zero modes;
+* zero-partition slices tile the axis: the shard layout is a bijection of
+  the canonical element order, shards are equal-sized, runs cover every
+  group exactly once;
+* the knapsack assigner respects capacities whenever they are feasible and
+  places every micro-batch exactly once.
+"""
+import numpy as np
+
+import jax
+
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
+
+from repro.configs.base import ModelConfig
+from repro.core.assignment import assign_microbatches
+from repro.core.schedule import P_F, P_O, P_S, Schedule
+from repro.models.transformer import init_model
+from repro.sharding.sync import (SyncSpec, _zero_layout_perm, _zero_runs,
+                                 grad_sync_plan, sync_byte_report)
+
+CFG = ModelConfig(name="prop", arch_type="dense", n_layers=2, d_model=32,
+                  n_heads=4, n_kv_heads=4, d_ff=64, vocab_size=128)
+L, G = 2, 4
+PARAMS = init_model(jax.random.PRNGKey(0), CFG)
+IS_SPEC = dict(is_leaf=lambda x: isinstance(x, SyncSpec))
+
+
+@st.composite
+def schedule_tables(draw):
+    n_mb = draw(st.integers(1, 6))
+    cells = draw(st.lists(st.sampled_from([P_F, P_O, P_S]),
+                          min_size=L * G * n_mb, max_size=L * G * n_mb))
+    return Schedule(np.asarray(cells, np.int8).reshape(L * G, n_mb), L, G)
+
+
+@settings(max_examples=40, deadline=None)
+@given(schedule_tables(), st.sampled_from(["masked", "zero"]),
+       st.sampled_from([1, 2, 4, 8]))
+def test_plan_covers_every_leaf_exactly_once(sched, mode, n_shards):
+    plan = grad_sync_plan(PARAMS, CFG, sched, mode=mode, n_shards=n_shards)
+    specs = jax.tree.leaves(plan, **IS_SPEC)
+    assert all(isinstance(s, SyncSpec) for s in specs)
+    # same treedef as the params: one spec per leaf, no leaf missed
+    assert jax.tree.structure(plan, **IS_SPEC) == jax.tree.structure(PARAMS)
+    rep = sync_byte_report(plan, PARAMS, n_shards=n_shards)
+    assert rep["n_leaves"] == len(jax.tree.leaves(PARAMS))
+    assert 0.0 <= rep["fraction"] <= 1.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(schedule_tables(), st.sampled_from([1, 2, 4, 8]),
+       st.booleans())
+def test_zero_partition_tiles_every_axis(sched, n_shards, elide):
+    plan = grad_sync_plan(PARAMS, CFG, sched, mode="zero",
+                          n_shards=n_shards, elide_gather=elide)
+
+    def check(spec, shape):
+        gs = shape[spec.axis] // len(spec.live)
+        runs = _zero_runs(spec)
+        # runs tile the group axis exactly once, in order
+        assert [r[2] for r in runs][0] == 0
+        assert all(a[3] == b[2] for a, b in zip(runs, runs[1:]))
+        assert runs[-1][3] == len(spec.live)
+        assert gs * len(spec.live) == shape[spec.axis]
+        # the shard layout is a bijection of the canonical order
+        perm = _zero_layout_perm(spec, shape[spec.axis])
+        assert np.array_equal(np.sort(perm), np.arange(shape[spec.axis]))
+        # equal shards: every device owns exactly 1/k of the axis
+        assert shape[spec.axis] % spec.shards == 0
+
+    def rec(p, spec):
+        if isinstance(spec, SyncSpec):
+            if spec.mode == "zero":
+                check(spec, p.shape)
+            elif spec.mode == "zero_stacked":
+                for sub in spec.per_cycle:
+                    check(sub, p.shape[1:])
+            return
+        if isinstance(spec, dict):
+            for k in spec:
+                rec(p[k], spec[k])
+        else:
+            for pi, si in zip(p, spec):
+                rec(pi, si)
+
+    rec(PARAMS, plan)
+
+
+@st.composite
+def assignment_instances(draw):
+    n_dev = draw(st.integers(1, 4))
+    n_items = draw(st.integers(1, 12))
+    costs = draw(st.lists(st.floats(0.0, 5.0), min_size=n_items,
+                          max_size=n_items))
+    return np.asarray(costs), n_dev
+
+
+@settings(max_examples=40, deadline=None)
+@given(assignment_instances())
+def test_assigner_places_every_item_within_feasible_capacity(inst):
+    costs, n_dev = inst
+    # generous per-device budget: total cost fits on every single device,
+    # so the LPT seed can never be forced into a violation
+    cap = float(costs.sum()) + 1.0
+    a = assign_microbatches(costs, n_dev, capacities=cap)
+    assert a.device_of.min() >= 0 and a.device_of.max() < n_dev
+    assert len(a.device_of) == len(costs)                # each item placed
+    assert np.allclose(a.loads.sum(), costs.sum())       # exactly once
+    assert (a.loads <= cap + 1e-9).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 4),
+       st.lists(st.floats(0.0, 5.0), min_size=1, max_size=4))
+def test_assigner_equal_counts(n_dev, per_dev, base_costs):
+    n_items = n_dev * per_dev
+    costs = np.resize(np.asarray(base_costs), n_items)
+    a = assign_microbatches(costs, n_dev, equal_counts=True)
+    assert (a.counts == per_dev).all()
