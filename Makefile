@@ -2,10 +2,19 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-kernels bench bench-json docs-check quickstart
+.PHONY: test test-fast test-multidevice test-kernels bench bench-json \
+	bench-check docs-check quickstart
 
 test:
 	$(PY) -m pytest -x -q
+
+# the tier-1 CI lane: everything except the slow 8-host-device subprocess
+# parity tests (those run via test-multidevice / the `multidevice` CI job)
+test-fast:
+	$(PY) -m pytest -x -q -m "not multidevice"
+
+test-multidevice:
+	$(PY) -m pytest -x -q -m multidevice
 
 test-kernels:
 	$(PY) -m pytest -x -q tests/test_kernels.py tests/test_kernel_grads.py \
@@ -17,9 +26,15 @@ bench:
 # machine-readable perf snapshots: BENCH_kernel_backward.json (wall time,
 # executed-FLOP fraction, dispatched-bytes fraction per op mix) and
 # BENCH_distributed_step.json (per-device all-reduce bytes, paper-mix vs
-# all-p_f, on an 8-host-device mesh)
+# all-p_f, schedule x sync-mode matrix incl. ZeRO-1/ZeRO-3, on an
+# 8-host-device mesh)
 bench-json:
 	$(PY) -m benchmarks.run --only kernel_backward,distributed_step
+
+# regenerate the snapshots AND gate them against the committed baselines
+# (benchmarks/bench_baselines.json) — what the CI `bench` job enforces
+bench-check: bench-json
+	$(PY) tools/check_bench.py
 
 # no dangling file references in docs/*.md + README (CI `docs` job)
 docs-check:

@@ -63,6 +63,14 @@ def main():
           f"uniform_wire_fraction={z['uniform_wire_fraction']:.3f};"
           f"uniform_masked_n_skipped={z['uniform_masked_n_skipped']};"
           f"opt_memory_fraction={z['opt_memory_fraction']:.4f}")
+    z3 = rec["zero3"]
+    print(f"zero3,0.0,"
+          f"paper_mix_wire_fraction={z3['paper_mix_wire_fraction']:.3f};"
+          f"residency_fraction={z3['residency_fraction']:.3f};"
+          f"n_gather_elided={z3['n_gather_elided']};"
+          f"n_all_gather_ops={z3['n_all_gather_ops']};"
+          f"opt_memory_fraction={z3['opt_memory_fraction']:.4f};"
+          f"residency_target<=0.50")
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=2)
     print(f"# wrote {args.out}", file=sys.stderr)

@@ -7,6 +7,7 @@ table, not absolute CIFAR numbers — see EXPERIMENTS.md §Paper-validation.
 
   python -m benchmarks.run            # all tables
   python -m benchmarks.run --only workload_variance,po_sweep
+  python -m benchmarks.run --list     # available entry names
 """
 from __future__ import annotations
 
@@ -447,9 +448,20 @@ BENCHES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma-separated benchmark names")
+                    help="comma-separated benchmark names (see --list)")
+    ap.add_argument("--list", action="store_true",
+                    help="print the available benchmark names and exit")
     args = ap.parse_args()
+    if args.list:
+        print("\n".join(BENCHES))
+        return
     names = list(BENCHES) if args.only is None else args.only.split(",")
+    unknown = sorted(set(names) - set(BENCHES))
+    if unknown:
+        # fail loudly: a typo'd --only used to run zero benchmarks and
+        # exit 0, which reads as "all green" in a script
+        ap.error(f"unknown benchmark(s): {', '.join(unknown)}\n"
+                 f"valid names: {', '.join(BENCHES)}")
     print("name,us_per_call,derived")
     for n in names:
         BENCHES[n]()

@@ -6,12 +6,17 @@ schedule that concentrates p_f onto a subset of subnets (the paper's
 "you don't need all attentions" regime — heterogeneous capacities, frozen
 low-score heads), the schedule-masked psum
 (``sharding.sync.apply_grad_sync``) elides the dead subnets' all-reduces
-and the compiled HLO carries measurably fewer collective bytes. The ZeRO
+and the compiled HLO carries measurably fewer collective bytes. The ZeRO-1
 variants (``sync_mode="zero"``) replace the masked psum with a sliced
 reduce-scatter + schedule-masked all-gather and shard the optimizer
 moments; their wire bytes match the masked psum at equal masks (ring
 physics — see docs/distributed.md) while per-device moment memory drops to
-~1/n_devices, measured here via ``zero_state_byte_report``.
+~1/n_devices, measured here via ``zero_state_byte_report``. The ZeRO-3
+variants (``sync_mode="zero3"``) also shard the params persistently and
+materialize full views only inside the step, under the schedule's forward
+mask — p_s-everywhere subnets are never gathered at all — trading extra
+all-gather wire for a per-device param residency window priced by
+``zero3_param_byte_report``.
 
 No import-time side effects: callers must provide enough local devices
 (``launch.dryrun`` runs under 512 host devices; ``benchmarks/dist_step.py``
@@ -38,11 +43,12 @@ from repro.core.cost_model import comm_cost, compute_cost
 from repro.core.schedule import (P_F, P_O, P_S, Schedule,
                                  gates_from_schedule, op_counts)
 from repro.data.synthetic import lm_batches, microbatch_assignment
-from repro.launch.hlo import collective_bytes
+from repro.launch.hlo import collective_bytes, collective_counts
 from repro.launch.mesh import make_data_mesh
 from repro.models.transformer import init_model
 from repro.optim.optimizers import adamw
 from repro.sharding.sync import (grad_sync_plan, sync_byte_report,
+                                 zero3_param_byte_report, zero_reshard,
                                  zero_state_byte_report)
 from repro.train.loop import make_distributed_train_step
 
@@ -58,14 +64,19 @@ def small_config() -> ModelConfig:
 def paper_mix_schedule(n_layers: int, n_groups: int, n_mb: int,
                        mix: Tuple[float, float, float] = (0.4, 0.3, 0.3),
                        seed: int = 0) -> Schedule:
-    """Schedule with table-entry fractions ~= mix, p_f *concentrated*.
+    """Schedule with table-entry fractions ~= mix, all three ops
+    *concentrated* by subnet.
 
     round(mix[0] * K) subnets run p_f on every micro-batch (high-score
     subnets under heterogeneous capacities / full budget); the remaining
-    subnets never run a backward and split their cells between p_o and p_s
-    to hit the global mix. This is the regime where Eq. 4's comm claim
-    lives — a subnet with no p_f anywhere has zero gradient everywhere and
-    drops out of the all-reduce entirely."""
+    subnets never run a backward, and the p_o budget fills whole rows of
+    them in order — so mid-score subnets are forward-only throughout and
+    the lowest-score subnets are p_s on *every* micro-batch ("you don't
+    need all attentions": frozen heads are frozen, not intermittently
+    sampled). The backward-liveness structure — hence every masked/ZeRO-1
+    wire number — is identical to an unconcentrated p_o spread (only p_f
+    rows are backward-live either way); what concentration adds is the
+    forward-dead population ZeRO-3's schedule-masked param gather elides."""
     K = n_layers * n_groups
     rng = np.random.default_rng(seed)
     n_pf_rows = int(round(mix[0] * K))
@@ -73,11 +84,26 @@ def paper_mix_schedule(n_layers: int, n_groups: int, n_mb: int,
     table = np.full((K, n_mb), P_S, np.int8)
     table[pf_rows] = P_F
     rest = np.setdiff1d(np.arange(K), pf_rows)
-    cells = [(r, c) for r in rest for c in range(n_mb)]
-    rng.shuffle(cells)
     want_po = int(round(mix[1] * K * n_mb))
-    for r, c in cells[:want_po]:
-        table[r, c] = P_O
+    filled = []
+    for r in rest:
+        take = min(n_mb, want_po)
+        if take == 0:
+            break
+        # partial rows spread their p_o cells over random columns so the
+        # per-micro-batch cost vector stays seed-dependent (the device
+        # assigner's re-plan regression test relies on that)
+        table[r, rng.permutation(n_mb)[:take]] = P_O
+        want_po -= take
+        filled.append(r)
+    if filled and len(filled) < len(rest) \
+            and bool((table[filled[-1]] == P_O).all()):
+        # the p_o budget divided into whole rows, leaving no partial row —
+        # swap one cell between the last full row and the next p_s row
+        # (counts unchanged) so two rng-columned partial rows exist and
+        # seed-dependence survives every (mix, K, n_mb) combination
+        table[filled[-1], rng.integers(n_mb)] = P_S
+        table[rest[len(filled)], rng.integers(n_mb)] = P_O
     return Schedule(table, n_layers, n_groups)
 
 
@@ -117,18 +143,23 @@ def measure_distributed_step(n_devices: int = 8, *,
                              time_steps: int = 0) -> dict:
     """Lower + compile the distributed step on an n-device data mesh for a
     schedule × sync-mode matrix: the all-p_f baseline, the concentrated
-    paper-mix under masked psum and ZeRO sync, and the uniformly spread
-    50%-live schedule (where whole-subnet elision never fires) under both.
-    Per-device collective bytes are parsed from the compiled HLO and
-    cross-checked against the sync plan's wire-byte model; the ``zero_sync``
-    summary carries the ZeRO acceptance numbers (wire fractions, per-device
-    optimizer-moment memory). time_steps > 0 additionally executes that
-    many steps per variant for wall time.
+    paper-mix under masked psum, ZeRO-1 and ZeRO-3 sync, and the uniformly
+    spread 50%-live schedule (where whole-subnet elision never fires) under
+    all three. Per-device collective bytes are parsed from the compiled HLO
+    and cross-checked against the sync plan's wire-byte model; the
+    ``zero_sync`` summary carries the ZeRO-1 acceptance numbers (wire
+    fractions, per-device optimizer-moment memory) and ``zero3`` the ZeRO-3
+    ones (wire fraction incl. the forward param all-gather, the
+    residency-window fraction, and the gather-elision count — the compiled
+    HLO of the zero3 variants must actually contain all-gather ops, see
+    ``collectives_n``). time_steps > 0 additionally executes that many
+    steps per variant for wall time.
 
     The optimizer is decay-free AdamW: zero weight decay keeps it
-    *elidable* (``Optimizer.elidable``), so the ZeRO gather mask can skip
+    *elidable* (``Optimizer.elidable``), so the ZeRO-1 gather mask can skip
     backward-dead runs — with decay every run's params change each step and
-    the gather must be dense."""
+    the ZeRO-1 gather must be dense (ZeRO-3 is indifferent: its shards are
+    always updated and its elision is forward-mask-only)."""
     cfg = cfg or small_config()
     G = cfg.n_heads
     mesh = make_data_mesh(n_devices)
@@ -148,8 +179,10 @@ def measure_distributed_step(n_devices: int = 8, *,
         "all_pf_baseline": ("all_pf_baseline", "masked"),
         "paper_mix": ("paper_mix", "masked"),
         "paper_mix_zero": ("paper_mix", "zero"),
+        "paper_mix_zero3": ("paper_mix", "zero3"),
         "uniform_half": ("uniform_half", "masked"),
         "uniform_half_zero": ("uniform_half", "zero"),
+        "uniform_half_zero3": ("uniform_half", "zero3"),
     }
     record = {
         "n_devices": n_devices, "mix": list(mix), "seed": seed,
@@ -177,10 +210,13 @@ def measure_distributed_step(n_devices: int = 8, *,
                                            live_bounds=bounds,
                                            sync_mode=sync_mode,
                                            params=params)
-        args = (params, opt_state, pbatch, gates)
+        # zero3 holds the params in the plan's shard layout between steps
+        pvar = zero_reshard(params, None, plan) if sync_mode == "zero3" \
+            else params
+        args = (pvar, opt_state, pbatch, gates)
         compiled = step.lower(*args).compile()
-        coll = collective_bytes(compiled.as_text(),
-                                default_group_size=n_devices)
+        hlo_text = compiled.as_text()
+        coll = collective_bytes(hlo_text, default_group_size=n_devices)
         var = {
             "schedule": sched_name,
             "sync_mode": sync_mode,
@@ -188,21 +224,25 @@ def measure_distributed_step(n_devices: int = 8, *,
             "cost_model": {"compute": round(compute_cost(sched.table), 4),
                            "comm": round(comm_cost(sched.table), 4)},
             "collectives": coll,
+            "collectives_n": collective_counts(hlo_text),
             "all_reduce_bytes": float(coll.get("all-reduce", 0.0)),
             "wire_bytes": float(sum(coll.values())),
             "sync_plan": sync_byte_report(plan, params,
                                           n_shards=n_devices),
             "rebalance": rebalance,
         }
-        if sync_mode == "zero":
+        if sync_mode in ("zero", "zero3"):
             var["opt_memory"] = zero_state_byte_report(
-                plan, params, n_devices, n_moments=2)   # adam m + v
+                plan, params, n_devices, n_moments=opt.n_moments)
+        if sync_mode == "zero3":
+            var["param_memory"] = zero3_param_byte_report(plan, params,
+                                                          n_devices)
         if bounds is not None:
             var["live_bounds"] = list(bounds)
         if time_steps > 0:
             # drive the AOT executable compiled above — calling the jitted
             # step again would re-trace and re-compile the same computation
-            p, s, m = compiled(params, opt_state, pbatch, gates)   # warm
+            p, s, m = compiled(pvar, opt_state, pbatch, gates)   # warm
             jax.block_until_ready(m["loss"])
             t0 = time.perf_counter()
             for _ in range(time_steps):
@@ -236,5 +276,24 @@ def measure_distributed_step(n_devices: int = 8, *,
         # per-device Adam moment memory under the ZeRO partition
         "opt_memory_fraction":
             v["paper_mix_zero"]["opt_memory"]["fraction"],
+    }
+    z3 = v["paper_mix_zero3"]
+    record["zero3"] = {
+        # honest wire accounting: the zero3 wire INCLUDES the forward param
+        # all-gather the replicated modes never pay — it buys the sharded
+        # residency below, it is not free
+        "paper_mix_wire_fraction": wire_frac("paper_mix_zero3"),
+        "uniform_wire_fraction": wire_frac("uniform_half_zero3"),
+        # per-device peak param residency model (shards + largest
+        # materialized unit) vs the replicated baseline; <= 0.5x is the
+        # acceptance bar
+        "residency_fraction": z3["param_memory"]["fraction"],
+        "peak_unit": z3["param_memory"]["peak_unit"],
+        # schedule-masked gather elision: forward-dead runs never gathered
+        "n_gather_elided": z3["param_memory"]["n_gather_elided"],
+        "elided_bytes": z3["param_memory"]["elided_bytes"],
+        # the lowered evidence that the gathers exist (and were counted)
+        "n_all_gather_ops": z3["collectives_n"].get("all-gather", 0),
+        "opt_memory_fraction": z3["opt_memory"]["fraction"],
     }
     return record

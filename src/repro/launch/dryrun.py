@@ -258,12 +258,16 @@ def main():
                   f"sync-plan fraction {var['sync_plan']['fraction']:.3f}  "
                   f"load spread {var['rebalance']['spread']}")
         z = rec["zero_sync"]
+        z3 = rec["zero3"]
         print(f"paper-mix all-reduce bytes at "
               f"{rec['all_reduce_fraction']:.1%} of the all-p_f baseline "
               f"(sync-plan model: {rec['sync_model_fraction']:.1%}); "
               f"zero sync: paper-mix wire {z['paper_mix_wire_fraction']:.1%}, "
               f"uniform wire {z['uniform_wire_fraction']:.1%}, "
-              f"opt memory {z['opt_memory_fraction']:.1%} "
+              f"opt memory {z['opt_memory_fraction']:.1%}; "
+              f"zero3: wire {z3['paper_mix_wire_fraction']:.1%}, "
+              f"param residency {z3['residency_fraction']:.1%}, "
+              f"{z3['n_gather_elided']} gathers elided "
               f"-> {path}")
         return
 

@@ -96,3 +96,18 @@ def collective_bytes(hlo_text: str,
             traffic = float(nbytes)
         out[op] += traffic
     return dict(out)
+
+
+def collective_counts(hlo_text: str) -> Dict[str, int]:
+    """Instruction counts by collective type (async pairs count once, at
+    ``-done``). Lets a test assert a lowering *contains* the expected ops
+    — e.g. the ZeRO-3 variants must carry param all-gathers where the
+    masked psum carries none — instead of inferring presence from the
+    byte totals alone."""
+    out: Dict[str, int] = Counter()
+    for m in _COLL_RE.finditer(hlo_text):
+        _, _, op, phase, _ = m.groups()
+        if phase == "-start":
+            continue
+        out[op] += 1
+    return dict(out)

@@ -50,12 +50,14 @@ def main():
                     help="route attention through the compacted Pallas "
                          "gated kernel path (single-device or per-shard "
                          "with --distributed; interpret mode on CPU)")
-    ap.add_argument("--sync-mode", choices=("masked", "zero"),
+    ap.add_argument("--sync-mode", choices=("masked", "zero", "zero3"),
                     default="masked",
                     help="distributed gradient sync: 'masked' = schedule-"
                          "masked psum (replicated optimizer state), "
                          "'zero' = ZeRO-1 sliced reduce-scatter/all-gather "
-                         "with optimizer moments sharded ~1/n_devices")
+                         "with optimizer moments sharded ~1/n_devices, "
+                         "'zero3' = fully sharded params with the "
+                         "schedule-masked (gate-elided) forward gather")
     ap.add_argument("--refresh-every", type=int, default=None,
                     help="re-plan the schedule (and re-run the knapsack "
                          "device assigner, rebuild the sync plan) every "
@@ -127,11 +129,18 @@ def main():
         print(f"assignment: loads {rep['loads']} spread {rep['spread']} "
               f"imbalance {rep['imbalance']:.3f} "
               f"({len(log.extras.get('refreshes', []))} replans)")
-        if args.sync_mode == "zero":
-            print(f"grad sync (zero): {sync['fraction']:.0%} all-reduce-"
-                  f"equivalent bytes ({sync['n_zero']} leaves partitioned "
-                  f"over {ndev} shards, rs {sync['rs_bytes']:.2e}B / "
+        if args.sync_mode in ("zero", "zero3"):
+            print(f"grad sync ({args.sync_mode}): {sync['fraction']:.0%} "
+                  f"all-reduce-equivalent bytes ({sync['n_zero']} leaves "
+                  f"partitioned over {ndev} shards, "
+                  f"rs {sync['rs_bytes']:.2e}B / "
                   f"ag {sync['ag_bytes']:.2e}B)")
+            if args.sync_mode == "zero3":
+                z3 = log.extras["zero3_params"]
+                print(f"param residency (zero3): "
+                      f"{z3['fraction']:.0%} of replicated peak "
+                      f"({z3['n_gather_elided']} forward-dead gathers "
+                      f"elided, peak unit {z3['peak_unit']})")
         else:
             print(f"grad sync: {sync['fraction']:.0%} of param bytes "
                   f"all-reduced ({sync['n_skipped']} leaves skipped, "

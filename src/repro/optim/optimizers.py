@@ -1,8 +1,10 @@
 """Minimal pure-JAX optimizer library (no optax dependency).
 
 The paper fine-tunes with SGD + momentum (§IV-A); AdamW is provided for the
-LLM fine-tuning paths. Optimizer states are pytrees shaped like params, so
-they shard under the same ZeRO-style policy as the weights.
+LLM fine-tuning paths. Optimizer states are pytrees shaped like params and
+``update`` is leaf-wise, so the same Optimizer runs replicated, on ZeRO-1
+moment shards, or fully shard-resident under ZeRO-3 (grads, moments and
+params all at shard shape — sharding/sync.py / train/loop.py).
 """
 from __future__ import annotations
 
@@ -20,7 +22,13 @@ class Optimizer(NamedTuple):
     # an exactly-identity update (no weight decay): the ZeRO-1 sync may
     # then elide the param all-gather for runs that have been backward-dead
     # since their moments were last zero (sharding/sync.py zero mode).
+    # ZeRO-3 does NOT need this: its owned shards are always updated (decay
+    # included) and its gather elision is a forward-liveness question only.
     elidable: bool = True
+    # params-shaped moment copies in the state (sgd: mu; adamw: m and v) —
+    # what the ZeRO memory accounting (zero_state_byte_report) multiplies
+    # by, instead of every call site hard-coding the optimizer family.
+    n_moments: int = 1
 
 
 def sgd(lr: float, momentum: float = 0.9, weight_decay: float = 0.0,
@@ -40,7 +48,8 @@ def sgd(lr: float, momentum: float = 0.9, weight_decay: float = 0.0,
         new_params = jax.tree.map(lambda p, u: p - lr * u, params, upd)
         return new_params, {"mu": mu, "step": state["step"] + 1}
 
-    return Optimizer(init, update, elidable=weight_decay == 0.0)
+    return Optimizer(init, update, elidable=weight_decay == 0.0,
+                     n_moments=1)
 
 
 def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
@@ -65,7 +74,8 @@ def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
         new_params = jax.tree.map(upd, params, m, v)
         return new_params, {"m": m, "v": v, "step": step}
 
-    return Optimizer(init, update, elidable=weight_decay == 0.0)
+    return Optimizer(init, update, elidable=weight_decay == 0.0,
+                     n_moments=2)
 
 
 def clip_scale(norm, max_norm: float):

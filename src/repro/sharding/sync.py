@@ -62,6 +62,31 @@ Leaves with no evenly divisible axis fall back to their masked spec (and
 keep replicated moments); ``sync_byte_report(..., n_shards=k)`` prices
 both collectives separately plus the ring-wire total, and
 ``zero_state_byte_report`` prices the per-device moment memory.
+
+ZeRO-3 form (``mode="zero3"``)
+------------------------------
+``grad_sync_plan(..., mode="zero3", n_shards=k)`` keeps the same run
+partition but makes the *shards* the persistent parameter state: no device
+holds a full replica between steps. Inside the step, full-leaf views exist
+only transiently (``zero3_materialize``) and the gather mask becomes a
+**forward** question — a (layer, head-group) run that is p_s on every
+micro-batch of the schedule contributes *exactly zero* to the residual
+stream (``gate_mix`` multiplies the group contribution by g_f == 0), so
+its parameters are never all-gathered at all: a zeros view is
+bit-identical, for the forward and (trivially) the backward. Runs with any
+p_f or p_o cell are gathered; protected leaves gather densely. Gradients
+of backward-live runs reduce-scatter straight onto the owning shard
+(the ZeRO-2 half), each device updates only its owned slice, and there is
+no post-update gather — next step's materialization starts from the
+updated shards. Unlike the ZeRO-1 gather elision this needs neither
+``Optimizer.elidable`` nor ``ever_live`` bookkeeping: the shard is the
+source of truth and is always updated, weight decay included.
+
+``zero3_param_byte_report`` prices the residency-window memory model:
+persistent bytes (owned shards + replicated fallback leaves) plus the
+largest transiently materialized unit (one transformer block, or one
+loss-path subtree) under the gather mask. See docs/distributed.md for
+what the model does and does not claim about the CPU emulation.
 """
 from __future__ import annotations
 
@@ -74,7 +99,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.schedule import P_F, Schedule
+from repro.core.schedule import P_F, P_S, Schedule
 
 
 def backward_live_groups(sched: Schedule) -> np.ndarray:
@@ -83,6 +108,18 @@ def backward_live_groups(sched: Schedule) -> np.ndarray:
     Note this is *schedule*-global, not per-device: a subnet live on any
     device needs the all-reduce on every device (SPMD runs one program)."""
     return (sched.layer_group_view() == P_F).any(axis=-1)
+
+
+def forward_live_groups(sched: Schedule) -> np.ndarray:
+    """[L, G] bool — subnet (l, g) has a live forward (any non-p_s cell).
+
+    The complement is the ZeRO-3 gather-elision set: a subnet that is p_s
+    on every micro-batch contributes exactly zero to the residual stream
+    whatever its parameter values (``gate_mix`` multiplies by g_f == 0),
+    so no device needs its params materialized that step. Superset of
+    ``backward_live_groups`` (p_f cells are forward-live too), which keeps
+    the zero-mode invariant gather ⊇ scatter intact."""
+    return (sched.layer_group_view() != P_S).any(axis=-1)
 
 
 @dataclass(frozen=True)
@@ -158,19 +195,32 @@ def _zero_axis(name: str, shape: Tuple[int, ...], cfg: ModelConfig, G: int,
 
 
 def _zero_leaf_spec(name: str, shape: Tuple[int, ...], live_g: np.ndarray,
-                    ever_g: np.ndarray, cfg: ModelConfig, protected: bool,
-                    k: int, elide_gather: bool) -> SyncSpec:
+                    ever_g: np.ndarray, fwd_g: np.ndarray, cfg: ModelConfig,
+                    protected: bool, k: int, elide_gather: bool,
+                    zero3: bool) -> SyncSpec:
     """Zero-mode spec for one unstacked leaf: partition + (live, gather)
-    masks; falls back to the masked spec when no axis splits evenly."""
+    masks; falls back to the masked spec when no axis splits evenly.
+
+    zero3=True switches the gather mask to forward liveness: the full view
+    is rebuilt from the owned shards every step, so the only question is
+    whether any consumer of a run's params survives the forward gates —
+    staleness (``ever_g``) and optimizer elidability cannot arise."""
     part = _zero_axis(name, shape, cfg, len(live_g), k)
     if part is None:
         return _leaf_spec(name, shape, live_g, cfg, protected)
     axis, groups = part
     if protected:
         live_g = np.ones_like(live_g)
-    gather_g = live_g | ever_g if elide_gather \
-        else np.ones_like(live_g, bool)
+    if zero3:
+        gather_g = fwd_g | live_g
+    else:
+        gather_g = live_g | ever_g if elide_gather \
+            else np.ones_like(live_g, bool)
     if groups == 1:
+        # coarse partition: the mask collapses to the whole block — for
+        # zero3 that is exactly the safety a non-group-sliceable leaf
+        # (norms, shared-KV weights, SSD/RG-LRU params) needs: it is only
+        # elidable when every group of its block is forward-dead.
         live_g = np.atleast_1d(live_g.any())
         gather_g = np.atleast_1d(gather_g.any())
     return SyncSpec("zero", axis=axis, shards=k,
@@ -181,6 +231,7 @@ def _zero_leaf_spec(name: str, shape: Tuple[int, ...], live_g: np.ndarray,
 def _block_plan(block, live_g: np.ndarray, cfg: ModelConfig,
                 stack: int = 0, *, mode: str = "masked", n_shards: int = 0,
                 ever_g: Optional[np.ndarray] = None,
+                fwd_g: Optional[np.ndarray] = None,
                 elide_gather: bool = True):
     """Plan for one block's param subtree. ``stack`` > 0 marks scan-stacked
     leaves whose leading dim holds one layer per index; ``live_g`` is then
@@ -188,11 +239,13 @@ def _block_plan(block, live_g: np.ndarray, cfg: ModelConfig,
     has_moe = isinstance(block, dict) and "moe" in block
     if ever_g is None:
         ever_g = np.zeros_like(live_g)
+    if fwd_g is None:
+        fwd_g = np.zeros_like(live_g)
 
-    def leaf(name, shape, lg, eg, prot):
-        if mode == "zero":
-            return _zero_leaf_spec(name, shape, lg, eg, cfg, prot, n_shards,
-                                   elide_gather)
+    def leaf(name, shape, lg, eg, fg, prot):
+        if mode in ("zero", "zero3"):
+            return _zero_leaf_spec(name, shape, lg, eg, fg, cfg, prot,
+                                   n_shards, elide_gather, mode == "zero3")
         return _leaf_spec(name, shape, lg, cfg, prot)
 
     def rec(tree, name, protected):
@@ -205,9 +258,9 @@ def _block_plan(block, live_g: np.ndarray, cfg: ModelConfig,
         # gating, so the whole FFN side of an MoE block keeps full sync.
         prot = protected or (has_moe and name == "norm2")
         if stack == 0:
-            return leaf(name, tree.shape, live_g, ever_g, prot)
+            return leaf(name, tree.shape, live_g, ever_g, fwd_g, prot)
         per_cycle = tuple(leaf(name, tree.shape[1:], live_g[c], ever_g[c],
-                               prot) for c in range(stack))
+                               fwd_g[c], prot) for c in range(stack))
         if all(s == per_cycle[0] for s in per_cycle):
             s = per_cycle[0]
             if s.mode in ("all", "none"):
@@ -242,7 +295,8 @@ def _fill_zero(tree, cfg, k):
     if isinstance(tree, (list, tuple)):
         return [_fill_zero(v, cfg, k) for v in tree]
     one = np.ones(1, bool)
-    return _zero_leaf_spec("", tree.shape, one, one, cfg, True, k, True)
+    return _zero_leaf_spec("", tree.shape, one, one, one, cfg, True, k,
+                           True, False)
 
 
 def grad_sync_plan(params, cfg: ModelConfig, sched: Schedule, *,
@@ -257,18 +311,24 @@ def grad_sync_plan(params, cfg: ModelConfig, sched: Schedule, *,
     earlier plan since the moments were last zero — their moments may be
     non-zero, so their params must still be gathered; ``elide_gather=False``
     (non-elidable optimizer, e.g. weight decay) forces a full gather mask.
+    mode="zero3": fully sharded params — same partition, but the gather
+    mask is *forward* liveness (see module docstring); ``ever_live`` and
+    ``elide_gather`` are ignored (the owned shards are always updated, so
+    no staleness exists for the mask to track).
 
     Static and host-side (numpy over the schedule table, shapes from the
     params/eval_shape tree) — baked into the jitted distributed step, so a
     new schedule means a new plan and a re-jit, exactly like the compaction
     bounds."""
     from repro.models.transformer import layer_groups
-    assert mode in ("masked", "zero"), mode
-    assert mode != "zero" or n_shards >= 1, "zero mode needs n_shards"
+    assert mode in ("masked", "zero", "zero3"), mode
+    assert mode == "masked" or n_shards >= 1, f"{mode} mode needs n_shards"
     live = backward_live_groups(sched)                       # [L, G]
     ever = np.zeros_like(live) if ever_live is None \
         else np.asarray(ever_live, bool)
     assert ever.shape == live.shape, (ever.shape, live.shape)
+    fwd = forward_live_groups(sched) if mode == "zero3" \
+        else np.zeros_like(live)
     n_cycles, pat, rem = layer_groups(cfg)
     P = len(pat)
     assert live.shape[0] == cfg.n_layers, (live.shape, cfg.n_layers)
@@ -283,17 +343,20 @@ def grad_sync_plan(params, cfg: ModelConfig, sched: Schedule, *,
                             live[[c * P + i for c in range(n_cycles)]],
                             cfg, stack=n_cycles,
                             ever_g=ever[[c * P + i for c in range(n_cycles)]],
+                            fwd_g=fwd[[c * P + i for c in range(n_cycles)]],
                             **kw)
                 for i in range(P)]
         elif key == "rest":
             plan[key] = [_block_plan(sub[i], live[n_cycles * P + i], cfg,
-                                     ever_g=ever[n_cycles * P + i], **kw)
+                                     ever_g=ever[n_cycles * P + i],
+                                     fwd_g=fwd[n_cycles * P + i], **kw)
                          for i in range(len(sub))]
         else:
             # embed / unembed / final_norm / frontend_proj: gradients flow
-            # through every sample's loss path — never skip.
-            plan[key] = _fill_zero(sub, cfg, n_shards) if mode == "zero" \
-                else _fill(sub, _ALL)
+            # through every sample's loss path — never skip (and in the
+            # zero modes: always scattered, always gathered).
+            plan[key] = _fill_zero(sub, cfg, n_shards) \
+                if mode in ("zero", "zero3") else _fill(sub, _ALL)
     return plan
 
 
@@ -482,6 +545,49 @@ def apply_zero_gather(updated, old_params, plan, axis_name: str):
                      [updated, old_params], plan)
 
 
+def _zero3_materialize_leaf(shard, spec: SyncSpec, axis_name: str):
+    """Owned shard -> transient full-leaf view for the step body.
+
+    Runs in the gather mask are all-gathered (device d's piece is the d-th
+    sub-chunk of the run, so a tiled gather restores the canonical run
+    content); elided runs materialize as zeros — exact, because every
+    consumer of their values is multiplied by g_f == 0 (see
+    ``forward_live_groups``), and the persistent state is the shard, which
+    the elision never touches."""
+    if not _is_zero(spec):
+        return shard
+    k = spec.shards
+    full = shard.shape[spec.axis] * k
+    gs = full // len(spec.live)
+    off = 0
+    parts = []
+    for _, gather, s, e in _zero_runs(spec):
+        plen = (e - s) * gs // k
+        if gather:
+            piece = jax.lax.slice_in_dim(shard, off, off + plen,
+                                         axis=spec.axis)
+            parts.append(jax.lax.all_gather(piece, axis_name,
+                                            axis=spec.axis, tiled=True))
+        else:
+            shape = list(shard.shape)
+            shape[spec.axis] = (e - s) * gs
+            parts.append(jnp.zeros(shape, shard.dtype))
+        off += plen
+    return jnp.concatenate(parts, axis=spec.axis) if len(parts) > 1 \
+        else parts[0]
+
+
+def zero3_materialize(params, plan, axis_name: str):
+    """Sharded params tree -> full-param views for the forward/backward.
+
+    Only runs in the gather mask move bytes; fallback (masked) leaves pass
+    through replicated. Must run inside shard_map. The inverse direction
+    needs no collective: grads reduce-scatter onto the shards
+    (``apply_zero_scatter``) and the update runs shard-resident."""
+    return _map_zero(lambda x, s: _zero3_materialize_leaf(x, s, axis_name),
+                     [params], plan)
+
+
 def zero_norm_sq(grads, plan):
     """(shard_sq, full_sq): squared-norm contributions of a mixed grads
     tree. ``shard_sq`` sums zero-leaf shards (disjoint across devices — a
@@ -606,6 +712,98 @@ def zero_state_byte_report(plan, params, n_shards: int,
     totals["fraction"] = (totals["per_device_bytes"]
                           / totals["replicated_bytes"]
                           if totals["replicated_bytes"] else 1.0)
+    return totals
+
+
+def _cycle_gather_fraction(spec: SyncSpec, c: int) -> Optional[float]:
+    """Gather fraction of cycle c of a (possibly stacked) leaf spec, or
+    None for fallback (masked/replicated) leaves."""
+    if spec.mode == "zero_stacked":
+        return _gather_fraction(spec.per_cycle[c])
+    if _is_zero(spec):
+        return _gather_fraction(spec)        # uniform across cycles
+    return None
+
+
+def zero3_param_byte_report(plan, params, n_shards: int) -> dict:
+    """Residency-window memory model of the ZeRO-3 partition.
+
+    Persistent per-device bytes: the owned shards (1/k of every
+    partitioned leaf) plus replicated fallback leaves. Transient bytes:
+    the full-leaf views the step materializes, priced per *residency
+    unit* — one transformer block (one cycle of one pattern position, or
+    one ``rest`` block) or one loss-path subtree — under the plan's gather
+    mask, with elided runs costing nothing (their zeros view folds into
+    the gated-off consumer). ``per_device_peak_bytes`` assumes the
+    streaming deployment schedule: one unit materialized at a time,
+    freed after use. The CPU-emulation step in this repo materializes all
+    gathered views inside one jit — the *wire* bytes and the elision are
+    measured there (HLO), the residency window is this model; see
+    docs/distributed.md.
+
+    ``fraction`` = peak / replicated is the ZeRO-3 memory claim;
+    ``n_gather_elided`` counts runs whose all-gather the schedule killed
+    (> 0 is the "the gates tell us which gathers are dead" acceptance)."""
+    def size_of(p):
+        return float(np.prod(p.shape)) * np.dtype(p.dtype).itemsize
+
+    totals = {"replicated_bytes": 0.0, "shard_bytes": 0.0,
+              "fallback_bytes": 0.0, "gathered_bytes": 0.0,
+              "elided_bytes": 0.0, "n_runs": 0, "n_gather_elided": 0,
+              "n_partitioned": 0, "n_fallback": 0}
+    for p, spec in _plan_leaves(params, plan):
+        size = size_of(p)
+        totals["replicated_bytes"] += size
+        if not _is_zero(spec):
+            totals["fallback_bytes"] += size
+            totals["n_fallback"] += 1
+            continue
+        totals["shard_bytes"] += size / n_shards
+        totals["n_partitioned"] += 1
+        subs = [(size / len(spec.per_cycle), s) for s in spec.per_cycle] \
+            if spec.mode == "zero_stacked" else [(size, spec)]
+        for sub_size, sub in subs:
+            for _, gather, s, e in _zero_runs(sub):
+                frac = (e - s) / len(sub.live)
+                totals["n_runs"] += 1
+                if gather:
+                    totals["gathered_bytes"] += sub_size * frac
+                else:
+                    totals["n_gather_elided"] += 1
+                    totals["elided_bytes"] += sub_size * frac
+
+    def unit(tree, plan_t, cycle=None, n_cycles=1):
+        u = 0.0
+        for p, spec in _plan_leaves(tree, plan_t):
+            if not _is_zero(spec):
+                continue
+            f = _cycle_gather_fraction(spec, 0 if cycle is None else cycle)
+            u += size_of(p) / n_cycles * f
+        return u
+
+    units = {}
+    for key, sub in plan.items():
+        if key == "cycles":
+            for i in range(len(sub)):
+                leaves = jax.tree.leaves(params[key][i])
+                n_cycles = leaves[0].shape[0] if leaves else 1
+                for c in range(n_cycles):
+                    units[f"cycles[{i}][{c}]"] = unit(
+                        params[key][i], sub[i], cycle=c, n_cycles=n_cycles)
+        elif key == "rest":
+            for i in range(len(sub)):
+                units[f"rest[{i}]"] = unit(params[key][i], sub[i])
+        else:
+            units[key] = unit(params[key], sub)
+    totals["peak_unit_bytes"] = max(units.values()) if units else 0.0
+    totals["peak_unit"] = max(units, key=units.get) if units else ""
+    totals["per_device_peak_bytes"] = (totals["shard_bytes"]
+                                       + totals["fallback_bytes"]
+                                       + totals["peak_unit_bytes"])
+    totals["fraction"] = (totals["per_device_peak_bytes"]
+                          / totals["replicated_bytes"]
+                          if totals["replicated_bytes"] else 1.0)
+    totals["n_shards"] = n_shards
     return totals
 
 

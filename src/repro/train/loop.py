@@ -195,6 +195,15 @@ def make_distributed_train_step(cfg: ModelConfig, opt: Optimizer, mesh,
       ``params`` (a template for the optimizer-state structure); the
       returned step expects/returns the optimizer state in the plan's
       shard layout (``sharding.sync.zero_reshard`` converts).
+    * ``"zero3"`` — fully sharded params: the step expects AND returns the
+      params in the plan's shard layout (same layout the moments use), so
+      no device holds a full replica between steps. The step body
+      materializes full views via a *schedule-masked* all-gather
+      (``sharding.sync.zero3_materialize``) — runs that are p_s on every
+      micro-batch are never gathered, a zeros view being exact — takes
+      grads against the views, reduce-scatters live runs straight onto
+      the owning shards (ZeRO-2), and updates shard-resident. Requires a
+      ``grad_sync_plan(mode="zero3", ...)`` plan and ``params``.
 
     sync_plan: per-leaf SyncSpec tree from ``sharding.sync.grad_sync_plan``.
     live_bounds: static per-device (live_fwd, live_bwd) compaction bounds
@@ -208,7 +217,8 @@ def make_distributed_train_step(cfg: ModelConfig, opt: Optimizer, mesh,
     from jax.sharding import PartitionSpec as P
 
     from repro.sharding.sync import (apply_grad_sync, apply_zero_gather,
-                                     apply_zero_scatter, zero_norm_sq,
+                                     apply_zero_scatter, zero3_materialize,
+                                     zero_norm_sq, zero_param_specs,
                                      zero_shard_params)
 
     def loss_of(params, batch, gates):
@@ -252,24 +262,49 @@ def make_distributed_train_step(cfg: ModelConfig, opt: Optimizer, mesh,
         params = apply_zero_gather(new_shard, params, sync_plan, axis_name)
         return params, opt_state, dict(metrics, loss=loss, grad_norm=gnorm)
 
+    def local_step_zero3(params, opt_state, batch, gates):
+        # params arrive as owned shards (the plan's layout); full views
+        # exist only between here and the update — the ZeRO-3 residency
+        # window. Runs the schedule proves forward-dead are never gathered
+        # (zeros view, exact: their every consumer is gated off).
+        full = zero3_materialize(params, sync_plan, axis_name)
+        (loss, metrics), grads = loss_of(full, batch, gates)
+        gsync = apply_zero_scatter(grads, sync_plan, axis_name)
+        loss = jax.lax.pmean(loss, axis_name)
+        metrics = {k: jax.lax.pmean(v, axis_name) for k, v in metrics.items()}
+        shard_sq, full_sq = zero_norm_sq(gsync, sync_plan)
+        gnorm = jnp.sqrt(jax.lax.psum(shard_sq, axis_name) + full_sq)
+        scale = clip_scale(gnorm, clip)
+        gsync = jax.tree.map(lambda g: g * scale, gsync)
+        # grads and params are both shard-resident at zero leaves: the
+        # update never touches a full tensor and there is no post-update
+        # gather — next step's materialization starts from the new shards.
+        params, opt_state = opt.update(gsync, opt_state, params)
+        return params, opt_state, dict(metrics, loss=loss, grad_norm=gnorm)
+
     # check_rep=False: skipped (dead-subnet) grad leaves are device-invariant
     # — identically zero everywhere — but shard_map's replication tracker
     # cannot prove that through an elided psum.
+    param_specs = P()
     if sync_mode == "masked":
         state_specs = P()
         body = local_step
-    elif sync_mode == "zero":
-        assert params is not None, "zero mode needs a params template"
+    elif sync_mode in ("zero", "zero3"):
+        assert params is not None, f"{sync_mode} mode needs a params template"
         state_shapes = jax.eval_shape(opt.init, params)
         state_specs = _zero_state_specs(state_shapes, sync_plan, axis_name)
-        body = local_step_zero
+        if sync_mode == "zero":
+            body = local_step_zero
+        else:
+            param_specs = zero_param_specs(sync_plan, axis_name)
+            body = local_step_zero3
     else:
         raise ValueError(f"unknown sync_mode {sync_mode!r}")
     step = shard_map(
         body, mesh=mesh,
-        in_specs=(P(), state_specs, P(axis_name),
+        in_specs=(param_specs, state_specs, P(axis_name),
                   (P(None, axis_name), P(None, axis_name))),
-        out_specs=(P(), state_specs, P()),
+        out_specs=(param_specs, state_specs, P()),
         check_rep=False)
     return jax.jit(step)
 
@@ -310,21 +345,26 @@ def finetune_distributed(params, cfg: ModelConfig, d2: D2FTConfig,
     schedule-masked all-gather, optimizer moments sharded ~1/n_devices);
     the gather elision engages only for ``opt.elidable`` optimizers and
     groups that have never been backward-live since their moments were
-    zero (tracked here as ``ever_live``). The returned opt_state is in
-    canonical element order regardless of sync_mode (the in-loop shard
-    layout is converted back on return), so it checkpoints/resumes on any
-    path."""
+    zero (tracked here as ``ever_live``). sync_mode="zero3" additionally
+    shards the params themselves: between steps every device holds only
+    its owned shards, full views are materialized inside the step under
+    the schedule's *forward* mask, and the per-refresh record gains the
+    ``zero3_params`` residency report. The returned params and opt_state
+    are in canonical element order regardless of sync_mode (the in-loop
+    shard layout is converted back on return), so they checkpoint/resume
+    on any path."""
     from repro.core.assignment import (device_sample_order,
                                        distributed_live_bounds,
                                        plan_device_assignment)
     from repro.core.schedule import op_counts
     from repro.sharding.sync import (backward_live_groups, grad_sync_plan,
-                                     sync_byte_report)
+                                     sync_byte_report, zero3_param_byte_report,
+                                     zero_reshard)
 
     log = log or TrainLog()
     opt_state = opt.init(params)
     ndev = mesh.shape["data"]
-    assert sync_mode in ("masked", "zero"), sync_mode
+    assert sync_mode in ("masked", "zero", "zero3"), sync_mode
     sched = assignment = sync_plan = step_fn = None
     ever_live = None
 
@@ -345,6 +385,9 @@ def finetune_distributed(params, cfg: ModelConfig, d2: D2FTConfig,
                 params, cfg, sched, mode="zero", n_shards=ndev,
                 ever_live=prior, elide_gather=opt.elidable)
             ever_live = ever_live | backward_live_groups(sched)
+        elif sync_mode == "zero3":
+            sync_plan = grad_sync_plan(params, cfg, sched, mode="zero3",
+                                       n_shards=ndev)
         else:
             sync_plan = grad_sync_plan(params, cfg, sched)
         record = {
@@ -353,6 +396,9 @@ def finetune_distributed(params, cfg: ModelConfig, d2: D2FTConfig,
             "op_counts": op_counts(sched),
             "device_of": [int(x) for x in assignment.device_of],
         }
+        if sync_mode == "zero3":
+            record["zero3_params"] = zero3_param_byte_report(
+                sync_plan, params, ndev)
         return sched, assignment, sync_plan, record
 
     for i, batch in enumerate(batches):
@@ -361,6 +407,11 @@ def finetune_distributed(params, cfg: ModelConfig, d2: D2FTConfig,
         if sched is None or (refresh_every and i % refresh_every == 0
                              and i > 0):
             old_plan = sync_plan
+            if sync_mode == "zero3" and old_plan is not None:
+                # back to canonical before scoring: the scoring pass reads
+                # param values whose group structure the shard layout
+                # permutes
+                params = zero_reshard(params, old_plan, None)
             sched, assignment, sync_plan, record = replan(batch)
             if sync_mode == "zero":
                 # canonical -> shard layout at the first plan (zeros are
@@ -369,6 +420,11 @@ def finetune_distributed(params, cfg: ModelConfig, d2: D2FTConfig,
                 # layouts on refresh
                 opt_state = _reshard_opt_state(opt_state, old_plan,
                                                sync_plan)
+            elif sync_mode == "zero3":
+                params = zero_reshard(params, None, sync_plan)
+                opt_state = _reshard_opt_state(opt_state, old_plan,
+                                               sync_plan)
+                log.extras["zero3_params"] = record["zero3_params"]
             record["step"] = i
             log.extras["rebalance"] = record["rebalance"]
             log.extras["sync"] = record["sync"]
@@ -392,10 +448,12 @@ def finetune_distributed(params, cfg: ModelConfig, d2: D2FTConfig,
         log.step_times.append(time.perf_counter() - t0)
         log.losses.append(float(metrics["loss"]))
         log.metrics.append({k: float(v) for k, v in metrics.items()})
-    if sync_mode == "zero" and sync_plan is not None:
+    if sync_mode in ("zero", "zero3") and sync_plan is not None:
         # hand back canonical element order: the shard layout is an
         # internal representation a checkpoint or another path must not see
         opt_state = _reshard_opt_state(opt_state, sync_plan, None)
+        if sync_mode == "zero3":
+            params = zero_reshard(params, sync_plan, None)
     return params, opt_state, log
 
 

@@ -76,7 +76,7 @@ def reference(setup):
 
 
 @pytest.mark.parametrize("path", ["kernel", "compacted", "dist_masked",
-                                  "dist_zero"])
+                                  "dist_zero", "dist_zero3"])
 def test_parity_matrix(path, setup, reference):
     sched, params, batch, gates, bounds = setup
     opt = sgd(1e-2)
@@ -89,11 +89,22 @@ def test_parity_matrix(path, setup, reference):
     else:
         from repro.launch.mesh import make_data_mesh
         mesh = make_data_mesh(1)
-        mode = "masked" if path == "dist_masked" else "zero"
+        mode = {"dist_masked": "masked", "dist_zero": "zero",
+                "dist_zero3": "zero3"}[path]
         plan = grad_sync_plan(params, CFG, sched, mode=mode, n_shards=1,
                               elide_gather=opt.elidable)
         step = make_distributed_train_step(CFG, opt, mesh, plan,
                                            sync_mode=mode, params=params)
+        if mode == "zero3":
+            # zero3 holds the params in the plan's shard layout between
+            # steps; run layout-in, layout-out and compare canonically
+            from repro.sharding.sync import zero_reshard
+            got = _run(step, zero_reshard(params, None, plan), opt, batch,
+                       gates)
+            got = zero_reshard(got, plan, None)
+            diff = _max_diff(got, reference)
+            assert diff <= TOL, f"{path} diverged from reference: {diff}"
+            return
     got = _run(step, params, opt, batch, gates)
     diff = _max_diff(got, reference)
     assert diff <= TOL, f"{path} diverged from masked reference: {diff}"

@@ -3,10 +3,14 @@
 requirements.txt, see conftest.optional_hypothesis).
 
 * ``grad_sync_plan`` covers every param leaf exactly once, whatever the
-  schedule, in both masked and zero modes;
+  schedule, in masked, zero and zero3 modes;
 * zero-partition slices tile the axis: the shard layout is a bijection of
   the canonical element order, shards are equal-sized, runs cover every
   group exactly once;
+* the zero3 partition + schedule-masked gather round-trips every leaf
+  bit-exactly: reassembling the per-device shards of every gathered run
+  reproduces the canonical content, elided runs are exactly the
+  forward-dead ones, and the gather mask covers the scatter mask;
 * the knapsack assigner respects capacities whenever they are feasible and
   places every micro-batch exactly once.
 """
@@ -41,7 +45,7 @@ def schedule_tables(draw):
 
 
 @settings(max_examples=40, deadline=None)
-@given(schedule_tables(), st.sampled_from(["masked", "zero"]),
+@given(schedule_tables(), st.sampled_from(["masked", "zero", "zero3"]),
        st.sampled_from([1, 2, 4, 8]))
 def test_plan_covers_every_leaf_exactly_once(sched, mode, n_shards):
     plan = grad_sync_plan(PARAMS, CFG, sched, mode=mode, n_shards=n_shards)
@@ -82,6 +86,69 @@ def test_zero_partition_tiles_every_axis(sched, n_shards, elide):
             elif spec.mode == "zero_stacked":
                 for sub in spec.per_cycle:
                     check(sub, p.shape[1:])
+            return
+        if isinstance(spec, dict):
+            for k in spec:
+                rec(p[k], spec[k])
+        else:
+            for pi, si in zip(p, spec):
+                rec(pi, si)
+
+    rec(PARAMS, plan)
+
+
+@settings(max_examples=40, deadline=None)
+@given(schedule_tables(), st.sampled_from([1, 2, 4, 8]))
+def test_zero3_partition_gather_roundtrips_bit_exact(sched, n_shards):
+    """Host-side emulation of the zero3 dataflow on every leaf: lay the
+    canonical array out in shard order (``_zero_layout_perm``, what
+    ``zero_reshard`` applies), split it into the k device shards, then
+    rebuild the full view the way ``zero3_materialize`` does — walking the
+    shard by run offsets, concatenating the k sub-chunks of gathered runs,
+    zeros for elided runs. The result must equal the canonical array with
+    exactly the elided runs zeroed, bit for bit — this pins the run-offset
+    arithmetic of the runtime gather against the layout permutation the
+    resharder uses. Also: gather ⊇ scatter on every leaf."""
+    plan = grad_sync_plan(PARAMS, CFG, sched, mode="zero3",
+                          n_shards=n_shards)
+
+    def emulate(x, spec):
+        ax, k = spec.axis, spec.shards
+        n = x.shape[ax]
+        gs = n // len(spec.live)
+        layout = np.take(x, _zero_layout_perm(spec, n), axis=ax)
+        shard_len = n // k
+        shards = [np.take(layout, np.arange(d * shard_len,
+                                            (d + 1) * shard_len), axis=ax)
+                  for d in range(k)]
+        parts, off = [], 0
+        expect = x.copy()
+        for _, gather, s, e in _zero_runs(spec):
+            plen = (e - s) * gs // k
+            if gather:
+                parts.append(np.concatenate(
+                    [np.take(sh, np.arange(off, off + plen), axis=ax)
+                     for sh in shards], axis=ax))
+            else:
+                shape = list(x.shape)
+                shape[ax] = (e - s) * gs
+                parts.append(np.zeros(shape, x.dtype))
+                idx = [slice(None)] * x.ndim
+                idx[ax] = slice(s * gs, e * gs)
+                expect[tuple(idx)] = 0
+            off += plen
+        got = np.concatenate(parts, axis=ax) if len(parts) > 1 else parts[0]
+        np.testing.assert_array_equal(got, expect)
+        assert all(g or not l for l, g in zip(spec.live, spec.gather))
+
+    def rec(p, spec):
+        if isinstance(spec, SyncSpec):
+            if spec.mode == "zero":
+                emulate(np.asarray(p), spec)
+            elif spec.mode == "zero_stacked":
+                arr = np.asarray(p)
+                for c, sub in enumerate(spec.per_cycle):
+                    emulate(arr[c], sub)
             return
         if isinstance(spec, dict):
             for k in spec:

@@ -1,0 +1,144 @@
+#!/usr/bin/env python
+"""Bench regression gate: compare freshly produced ``BENCH_*.json`` files
+against committed baseline values with explicit tolerances.
+
+CI's ``bench`` job used to only *upload* the JSON snapshots — a PR could
+silently regress the paper-mix wire fraction or the ZeRO memory fractions
+and stay green. This tool turns the numbers into a failing gate:
+
+    python -m benchmarks.run --only kernel_backward,distributed_step
+    python tools/check_bench.py            # exit 1 on any regression
+
+(`make bench-check` runs both.)
+
+Baselines live in ``benchmarks/bench_baselines.json``::
+
+    {
+      "BENCH_distributed_step.json": {
+        "all_reduce_fraction":            {"value": 0.48, "tol": 0.05},
+        "zero3.residency_fraction":       {"max": 0.50},
+        "zero3.n_gather_elided":          {"min": 1},
+        ...
+      }
+    }
+
+Each dotted path is resolved into the fresh JSON (integer components index
+into lists). Three check kinds, combinable per key:
+
+* ``value`` + ``tol`` — |fresh − value| ≤ tol (two-sided drift alarm, for
+  fractions that should stay put in BOTH directions: an "improvement" the
+  code cannot explain is a broken measurement);
+* ``max`` — fresh ≤ max (acceptance ceilings, e.g. residency ≤ 0.5×);
+* ``min`` — fresh ≥ min (counters that must stay engaged, e.g. the
+  gather-elision count > 0).
+
+``--update`` rewrites the ``value`` fields in the baselines file from the
+fresh JSONs (tolerances and bounds are kept) — run it when a PR changes a
+number *on purpose*, and commit the diff so the change is reviewed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINES = os.path.join(os.path.dirname(__file__), "..",
+                                 "benchmarks", "bench_baselines.json")
+
+
+def resolve(doc, path: str):
+    """Walk a dotted path; integer components index lists."""
+    node = doc
+    for part in path.split("."):
+        if isinstance(node, list):
+            node = node[int(part)]
+        elif isinstance(node, dict):
+            if part not in node:
+                raise KeyError(path)
+            node = node[part]
+        else:
+            raise KeyError(path)
+    return node
+
+
+def check_key(fresh, path: str, spec: dict):
+    """Returns (ok, message) for one baseline entry."""
+    try:
+        got = resolve(fresh, path)
+    except (KeyError, IndexError, ValueError):
+        return False, f"{path}: MISSING from fresh bench output"
+    if not isinstance(got, (int, float)) or isinstance(got, bool):
+        return False, f"{path}: not a number ({got!r})"
+    problems = []
+    if "max" in spec and got > spec["max"]:
+        problems.append(f"{got:.6g} > max {spec['max']:.6g}")
+    if "min" in spec and got < spec["min"]:
+        problems.append(f"{got:.6g} < min {spec['min']:.6g}")
+    if "value" in spec:
+        tol = spec.get("tol", 0.0)
+        if abs(got - spec["value"]) > tol:
+            problems.append(
+                f"{got:.6g} drifted from {spec['value']:.6g} "
+                f"by {abs(got - spec['value']):.6g} (tol {tol:.6g})")
+    if problems:
+        return False, f"{path}: " + "; ".join(problems)
+    bounds = "/".join(
+        f"{k}={spec[k]:.6g}" for k in ("value", "tol", "max", "min")
+        if k in spec)
+    return True, f"{path}: {got:.6g} ok ({bounds})"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="fail when BENCH_*.json metrics regress past the "
+                    "committed baselines")
+    ap.add_argument("--baselines", default=DEFAULT_BASELINES,
+                    help="committed baseline spec (JSON)")
+    ap.add_argument("--dir", default=".",
+                    help="directory holding the fresh BENCH_*.json files")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline 'value' fields from the "
+                         "fresh files instead of checking")
+    args = ap.parse_args()
+
+    with open(args.baselines) as f:
+        baselines = json.load(f)
+
+    failures = 0
+    for bench_file, keys in baselines.items():
+        path = os.path.join(args.dir, bench_file)
+        if not os.path.exists(path):
+            print(f"FAIL {bench_file}: file not found (run "
+                  f"`make bench-json` first)")
+            failures += 1
+            continue
+        with open(path) as f:
+            fresh = json.load(f)
+        for key, spec in keys.items():
+            if args.update and "value" in spec:
+                try:
+                    spec["value"] = resolve(fresh, key)
+                    print(f"UPDATE {bench_file} {key} = {spec['value']:.6g}")
+                except (KeyError, IndexError, ValueError):
+                    print(f"FAIL {bench_file} {key}: missing, not updated")
+                    failures += 1
+                continue
+            ok, msg = check_key(fresh, key, spec)
+            print(("PASS " if ok else "FAIL ") + f"{bench_file} {msg}")
+            failures += 0 if ok else 1
+
+    if args.update:
+        with open(args.baselines, "w") as f:
+            json.dump(baselines, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {args.baselines}")
+    if failures:
+        print(f"# {failures} bench check(s) failed", file=sys.stderr)
+        return 1
+    print("# all bench checks passed", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
