@@ -2,8 +2,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-multidevice test-kernels bench bench-json \
-	bench-check docs-check quickstart
+.PHONY: test test-fast test-multidevice test-kernels test-serving bench \
+	bench-json bench-check docs-check quickstart
 
 test:
 	$(PY) -m pytest -x -q
@@ -20,16 +20,23 @@ test-kernels:
 	$(PY) -m pytest -x -q tests/test_kernels.py tests/test_kernel_grads.py \
 		tests/test_compaction.py
 
+# the serving suite: paged-KV decode parity, the Pallas paged-decode
+# kernel, page-manager/packer properties and engine invariants
+test-serving:
+	$(PY) -m pytest -x -q tests/test_serving.py \
+		tests/test_serving_properties.py
+
 bench:
 	$(PY) -m benchmarks.run $(if $(ONLY),--only $(ONLY))
 
 # machine-readable perf snapshots: BENCH_kernel_backward.json (wall time,
-# executed-FLOP fraction, dispatched-bytes fraction per op mix) and
+# executed-FLOP fraction, dispatched-bytes fraction per op mix),
 # BENCH_distributed_step.json (per-device all-reduce bytes, paper-mix vs
 # all-p_f, schedule x sync-mode matrix incl. ZeRO-1/ZeRO-3, on an
-# 8-host-device mesh)
+# 8-host-device mesh) and BENCH_serving.json (paged-KV continuous-batching
+# throughput, per-token latency, knapsack wave plan, page occupancy)
 bench-json:
-	$(PY) -m benchmarks.run --only kernel_backward,distributed_step
+	$(PY) -m benchmarks.run --only kernel_backward,distributed_step,serving
 
 # regenerate the snapshots AND gate them against the committed baselines
 # (benchmarks/bench_baselines.json) — what the CI `bench` job enforces

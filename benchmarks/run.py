@@ -427,6 +427,18 @@ def bench_distributed_step():
     sys.stderr.write(proc.stderr)
 
 
+# ---------------------------------------------- paged-KV serving throughput
+def bench_serving():
+    """Gate-aware serving: a synthetic mixed-length request trace through
+    the continuous-batching engine over the paged KV cache — tokens/sec,
+    per-token latency p50/p99, the request-level knapsack wave plan and
+    peak page occupancy. Deterministic counters are gated tightly, wall
+    clock generously. Writes ``BENCH_serving.json``; see
+    benchmarks/serving.py for the trace and engine geometry."""
+    from benchmarks import serving
+    serving.main([])
+
+
 BENCHES = {
     "workload_variance": bench_workload_variance,
     "execution_time": bench_execution_time,
@@ -442,6 +454,7 @@ BENCHES = {
     "packed_flops": bench_packed_flops,
     "kernel_backward": bench_kernel_backward,
     "distributed_step": bench_distributed_step,
+    "serving": bench_serving,
 }
 
 

@@ -17,6 +17,7 @@ from repro.kernels.d2ft_attention import (d2ft_flash_attention,
                                           gated_flash_attention,
                                           pad_to_blocks)
 from repro.kernels.lora_matmul import lora_matmul
+from repro.kernels.paged_decode import paged_flash_decode
 from repro.kernels import ref
 
 
@@ -119,6 +120,56 @@ def gated_attention(q, k, v, g_f, g_b=None, *, causal: bool = True,
                                  window=window, block_q=block_q,
                                  block_k=block_k, interpret=interpret,
                                  live_fwd=live_fwd, live_bwd=live_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def _paged_decode_impl(q, k_pages, v_pages, page_table, lengths, g_f, *,
+                       window, interpret):
+    return paged_flash_decode(q, k_pages, v_pages, page_table, lengths, g_f,
+                              window=window,
+                              interpret=_auto_interpret(interpret))
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths,
+                           g_f=None, *, window: int = 0,
+                           interpret: Optional[bool] = None):
+    """Decode-mode entry to the gated attention kernel family: one token per
+    sequence against a paged KV cache, pages streamed by table indirection
+    from scalar prefetch (kernels/paged_decode.py).
+
+    q: [B, H, hd] post-rope queries (position ``lengths[b]``); k_pages,
+    v_pages: [n_pages, page_size, n_kv, hd] shared pools (GQA un-expanded —
+    the kernel's index map resolves head groups); page_table: [B, n_pmax]
+    int32, padded with the null page 0 (every entry must be a valid page id:
+    index maps run before block-skip predicates); lengths: [B] int32 tokens
+    already cached. g_f: optional [B, H] forward gates in {0,1} — serving is
+    schedule-free so the default is all-ones; gated-off heads write zeros
+    and skip the MXU like the training kernel's p_s path. Returns [B,H,hd].
+    """
+    B, H, hd = q.shape
+    if q.shape[-1] != k_pages.shape[-1]:
+        raise ValueError(f"q head_dim {hd} != pool head_dim "
+                         f"{k_pages.shape[-1]}")
+    if k_pages.shape != v_pages.shape:
+        raise ValueError(f"k/v pool shapes differ: {k_pages.shape} vs "
+                         f"{v_pages.shape}")
+    if page_table.shape[0] != B or lengths.shape != (B,):
+        raise ValueError(
+            f"page_table/lengths batch mismatch: {page_table.shape}, "
+            f"{lengths.shape}, B={B}")
+    if g_f is None:
+        g_f = jnp.ones((B, H), jnp.float32)
+    elif g_f.shape != (B, H):
+        raise ValueError(f"g_f must be [B={B}, H={H}], got {g_f.shape}")
+    ct = _concrete(page_table)
+    if ct is not None:
+        n_pages = k_pages.shape[0]
+        if ct.min() < 0 or ct.max() >= n_pages:
+            raise ValueError(
+                f"page_table entries must be valid page ids in [0, "
+                f"{n_pages}): got range [{ct.min()}, {ct.max()}]")
+    return _paged_decode_impl(q, k_pages, v_pages, page_table, lengths, g_f,
+                              window=window, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "block_m", "block_n",

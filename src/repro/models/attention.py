@@ -169,13 +169,17 @@ def apply_attention(params, x, *, n_heads: int, n_kv_heads: int, head_dim: int,
                     causal: bool, window: int = 0, rope: bool = True,
                     rope_theta: float = 10_000.0,
                     positions: Optional[jnp.ndarray] = None,
-                    head_scale: Optional[jnp.ndarray] = None):
+                    head_scale: Optional[jnp.ndarray] = None,
+                    return_kv: bool = False):
     """Returns attention block output [B,S,d_model].
 
     window > 0 selects sliding-window attention; when S > 2*window a
     block-local (chunked) subquadratic implementation is used.
     head_scale: optional [B, n_heads] multiplier applied to per-head outputs
     before the output projection (D2FT packed-path gating hook).
+    return_kv: additionally return the post-rope (k, v) [B,S,n_kv,hd] —
+    the serving prefill captures them into the KV cache (forward() + cache
+    dump instead of a sequential decode loop, see serving/decode.py).
     """
     B, S, _ = x.shape
     if positions is None:
@@ -198,7 +202,35 @@ def apply_attention(params, x, *, n_heads: int, n_kv_heads: int, head_dim: int,
 
     if head_scale is not None:
         out = out * head_scale[:, None, :, None].astype(out.dtype)
-    return out.reshape(B, S, n_heads * head_dim) @ params["wo"]
+    out = out.reshape(B, S, n_heads * head_dim) @ params["wo"]
+    if return_kv:
+        return out, k, v
+    return out
+
+
+def kv_prefill_cache(k, v, window: int, max_len: int) -> dict:
+    """Full-history prefill K/V [B,S,n_kv,hd] -> the ``init_kv_cache``
+    decode layout, so ``decode_attention`` can continue from position S.
+
+    Global layers get the zero-padded [B, max_len, ...] cache. Local layers
+    get the [B, W, ...] ring buffer: slot ``p % W`` holds position ``p`` for
+    the last ``min(S, W)`` positions — exactly the state a sequential
+    decode-path prefill would have left, including the invariant that the
+    next decode step (t = S) overwrites the slot whose position just fell
+    out of the window."""
+    B, S = k.shape[:2]
+    if window and window > 0:
+        L = window
+        m = min(S, L)
+        pos = jnp.arange(S - m, S)
+        kc = jnp.zeros((B, L) + k.shape[2:], k.dtype).at[:, pos % L].set(
+            k[:, pos])
+        vc = jnp.zeros((B, L) + v.shape[2:], v.dtype).at[:, pos % L].set(
+            v[:, pos])
+        return {"k": kc, "v": vc}
+    assert S <= max_len, f"prompt length {S} exceeds cache max_len {max_len}"
+    pad = ((0, 0), (0, max_len - S)) + ((0, 0),) * (k.ndim - 2)
+    return {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
 
 
 def _block_local_attention(q, k, v, window: int):

@@ -78,20 +78,32 @@ def _causal_conv(x, conv_w, conv_b, prev=None):
 
 
 def apply_rglru(params, x, cfg: RGLRUConfig,
-                head_scale: Optional[jnp.ndarray] = None):
-    """Training/prefill forward. x: [B,S,d_model] -> [B,S,d_model]."""
+                head_scale: Optional[jnp.ndarray] = None,
+                return_state: bool = False):
+    """Training/prefill forward. x: [B,S,d_model] -> [B,S,d_model].
+
+    return_state: additionally return the decode cache after the last token
+    (``init_rglru_cache`` structure: the conv tail of raw pre-conv inputs
+    plus the f32 hidden state) — the serving prefill dump."""
     gate = jax.nn.gelu(x @ params["w_gate_branch"])
-    u = x @ params["w_rec_branch"]
-    u = _causal_conv(u, params["conv_w"], params["conv_b"])
+    u_raw = x @ params["w_rec_branch"]
+    u = _causal_conv(u_raw, params["conv_w"], params["conv_b"])
     a, b = _rglru_gates(params, u)
-    h = _assoc_scan(a, b).astype(x.dtype)
+    h32 = _assoc_scan(a, b)                             # [B,S,W] f32
+    h = h32.astype(x.dtype)
     if head_scale is not None:
         H = head_scale.shape[-1]
         W = h.shape[-1]
         hs = jnp.repeat(head_scale, W // H, axis=-1)    # block-diagonal groups
         h = h * hs[:, None, :].astype(h.dtype)
     y = h * gate
-    return y @ params["w_out"]
+    out = y @ params["w_out"]
+    if return_state:
+        W = params["conv_w"].shape[0]
+        pad = jnp.zeros((x.shape[0], W - 1, u_raw.shape[-1]), u_raw.dtype)
+        conv_tail = jnp.concatenate([pad, u_raw], axis=1)[:, -(W - 1):]
+        return out, {"conv": conv_tail, "h": h32[:, -1]}
+    return out
 
 
 def init_rglru_cache(batch: int, d_model: int, cfg: RGLRUConfig, dtype):

@@ -70,9 +70,11 @@ def _gated_rmsnorm(y, z, scale, eps=1e-6):
     return (y.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(y.dtype) * scale
 
 
-def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, return_final_state=False):
     """Core SSD. xh: [B,S,H,P]; dt: [B,S,H]; A: [H] (negative);
-    Bm, Cm: [B,S,N]. Returns y: [B,S,H,P].
+    Bm, Cm: [B,S,N]. Returns y: [B,S,H,P]; with ``return_final_state`` also
+    the recurrent state after the last token [B,H,P,N] f32 (what a decode
+    cache must carry to continue the sequence — the serving prefill dump).
     """
     Bsz, S, H, P = xh.shape
     N = Bm.shape[-1]
@@ -110,7 +112,7 @@ def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
         new = carry * jnp.exp(tot)[:, :, None, None] + st
         return new, carry                                        # emit state *before* this chunk
     init = jnp.zeros((Bsz, H, P, N), jnp.float32)
-    _, prev_states = jax.lax.scan(
+    final_state, prev_states = jax.lax.scan(
         step, init,
         (jnp.moveaxis(states, 1, 0),
          jnp.moveaxis(total, 1, 0).astype(jnp.float32)))
@@ -120,27 +122,48 @@ def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
     y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
                          Cc.astype(jnp.float32), jnp.exp(cum), prev_states)
     y = (y_intra.astype(jnp.float32) + y_inter).reshape(Bsz, S, H, P)
-    return y.astype(xh.dtype)
+    y = y.astype(xh.dtype)
+    if return_final_state:
+        return y, final_state
+    return y
 
 
 def apply_ssd(params, x, d_model: int, cfg: SSMConfig,
-              head_scale: Optional[jnp.ndarray] = None):
-    """Training/prefill forward. x: [B,S,d_model] -> [B,S,d_model]."""
+              head_scale: Optional[jnp.ndarray] = None,
+              return_state: bool = False):
+    """Training/prefill forward. x: [B,S,d_model] -> [B,S,d_model].
+
+    return_state: additionally return the decode cache after the last token
+    (same structure as ``init_ssd_cache``: the conv tail of raw xBC inputs
+    plus the f32 recurrent state) — the serving prefill dump, so a decode
+    loop can continue the sequence without replaying it token by token.
+    Requires S to be a multiple of the SSD chunk like the forward itself.
+    """
     d_inner, H, P, N = _dims(d_model, cfg)
-    z, xBC, dt = _split_in(params, x, d_model, cfg)
-    xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    z, xBC_raw, dt = _split_in(params, x, d_model, cfg)
+    xBC = _causal_conv(xBC_raw, params["conv_w"], params["conv_b"])
     xin = xBC[..., :d_inner].reshape(*x.shape[:2], H, P)
     Bm = xBC[..., d_inner:d_inner + N]
     Cm = xBC[..., d_inner + N:]
     dt = jax.nn.softplus(dt + params["dt_bias"])
     A = -jnp.exp(params["A_log"].astype(jnp.float32))
-    y = ssd_chunked(xin, dt, A, Bm, Cm, cfg.chunk)
+    y = ssd_chunked(xin, dt, A, Bm, Cm, cfg.chunk,
+                    return_final_state=return_state)
+    state = None
+    if return_state:
+        y, state = y
     y = y + params["D"][None, None, :, None] * xin
     if head_scale is not None:
         y = y * head_scale[:, None, :, None].astype(y.dtype)
     y = y.reshape(*x.shape[:2], d_inner)
     y = _gated_rmsnorm(y, z, params["norm_scale"])
-    return y @ params["w_out"]
+    out = y @ params["w_out"]
+    if return_state:
+        W = params["conv_w"].shape[0]
+        pad = jnp.zeros((x.shape[0], W - 1, xBC_raw.shape[-1]), xBC_raw.dtype)
+        conv_tail = jnp.concatenate([pad, xBC_raw], axis=1)[:, -(W - 1):]
+        return out, {"conv": conv_tail, "state": state}
+    return out
 
 
 # -------------------------------------------------------------------- decode

@@ -475,6 +475,87 @@ def decode_step(params, cache, cfg: ModelConfig, token, t, policy=None):
     return softcap(logits, cfg.logit_softcap), new_cache
 
 
+# ====================================================== prefill (cache dump)
+def _prefill_block(p, x, kind: str, cfg: ModelConfig, max_len: int,
+                   raw_kv: bool):
+    """One block of the batched prefill: the dense forward computation of
+    ``apply_block`` (ungated, unsharded) plus the decode-cache entry the
+    block leaves behind — post-rope K/V for attention, final conv/recurrent
+    state for SSD / RG-LRU. Returns (x, cache_entry)."""
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        window = cfg.window if kind == ATTN_LOCAL else 0
+        c, k, v = attn.apply_attention(
+            p["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, causal=cfg.causal, window=window,
+            rope=cfg.rope, rope_theta=cfg.rope_theta, return_kv=True)
+        entry = {"k": k, "v": v} if raw_kv else \
+            attn.kv_prefill_cache(k, v, window, max_len)
+    elif kind == SSD:
+        c, entry = ssm_mod.apply_ssd(p["ssd"], h, cfg.d_model, cfg.ssm,
+                                     return_state=True)
+    elif kind == RGLRU:
+        c, entry = rglru_mod.apply_rglru(p["rglru"], h, cfg.rglru,
+                                         return_state=True)
+    else:
+        raise ValueError(kind)
+    x = x + c
+    if "norm2" in p:
+        h2 = apply_norm(p["norm2"], x, cfg.norm)
+        y, _ = _apply_ffn(p, h2, cfg, None, None)
+        x = x + y
+    return x, entry
+
+
+def prefill_forward(params, cfg: ModelConfig, tokens, max_len: int = 0,
+                    *, raw_kv: bool = False):
+    """Batched serving prefill: ONE teacher-forced ``forward()`` pass over
+    the whole prompt that also dumps the decode caches — O(1) launches
+    instead of the O(S) sequential decode-path loop.
+
+    tokens: [B, S] int32. Returns (logits [B, S, vocab], cache) where cache
+    matches ``init_cache(cfg, B, max_len)`` structurally and decode can
+    continue from position S. With ``raw_kv=True`` attention entries are
+    instead the full post-rope history ``{"k","v"}: [B, S, n_kv, hd]`` —
+    what the paged serving engine slices into fixed-size pages
+    (``serving/engine.py``).
+
+    Layers are unrolled (no scan): serving compiles once per engine and
+    needs per-layer cache capture, not O(1)-in-depth HLO like training.
+    """
+    cdt = jnp.dtype(cfg.compute_dtype)
+    from repro.models.layers import apply_embedding
+    B, S = tokens.shape
+    max_len = max_len or S
+    x = apply_embedding(params["embed"], tokens).astype(cdt)
+
+    n_cycles, pat, rem = layer_groups(cfg)
+    P = len(pat)
+    cache = {"rest": []}
+    cycle_entries = []
+    for c in range(n_cycles):
+        blocks = jax.tree.map(lambda a: a[c], params["cycles"])
+        ents = []
+        for i in range(P):
+            x, e = _prefill_block(blocks[i], x, pat[i], cfg, max_len, raw_kv)
+            ents.append(e)
+        cycle_entries.append(ents)
+    if n_cycles > 0:
+        cache["cycles"] = jax.tree.map(lambda *leaves: jnp.stack(leaves),
+                                       *cycle_entries)
+    for i, kind in enumerate(rem):
+        x, e = _prefill_block(params["rest"][i], x, kind, cfg, max_len,
+                              raw_kv)
+        cache["rest"].append(e)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T.astype(cdt)
+    else:
+        logits = x @ params["unembed"].astype(cdt)
+    return softcap(logits, cfg.logit_softcap), cache
+
+
 # ============================================================== loss helpers
 @jax.custom_vjp
 def fused_xent(logits, labels):

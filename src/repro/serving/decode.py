@@ -4,12 +4,20 @@
 per sequence against a cache of ``seq_len`` tokens. ``generate`` drives a
 full prefill + N-token decode for the examples.
 
+Prefill is production-shaped: one batched teacher-forced ``forward()`` pass
+whose per-layer K/V (and SSD / RG-LRU state) is dumped straight into the
+decode caches (``models.transformer.prefill_forward``) — O(1) launches.
+The pre-PR sequential decode-path loop is kept as ``prefill_sequential``,
+the cache-exact test oracle the parity suite pins the dump against
+(``tests/test_serving.py``).
+
 Serving is schedule-free: D2FT only changes *training* (which subnets run
 a backward); the fine-tuned params decode through the ordinary dense path
 here, so nothing in this module consumes a ``Schedule``. Sharded serving
 reuses ``sharding.policy`` via the ``policy=`` hooks on
 ``decode_step``/``serve_step`` (the decode dry-run shapes exercise them).
-See docs/architecture.md for where this sits in the stack.
+Paged, continuously batched serving lives in ``serving/engine.py``.
+See docs/serving.md for where this sits in the stack.
 """
 from __future__ import annotations
 
@@ -19,7 +27,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.transformer import decode_step, forward, init_cache
+from repro.models.transformer import (decode_step, forward, init_cache,
+                                      prefill_forward)
 
 
 def serve_step(params, cache, cfg: ModelConfig, token, t, policy=None):
@@ -31,8 +40,20 @@ def serve_step(params, cache, cfg: ModelConfig, token, t, policy=None):
 
 
 def prefill(params, cfg: ModelConfig, tokens, max_len: int):
-    """Sequential prefill through the decode path (cache-exact; fine for
-    example-scale runs — production prefill uses forward() + cache dump)."""
+    """Batched prefill: one ``forward()`` pass + cache dump.
+
+    Returns (logits [B,1,V] — the last position's logits, the greedy seed
+    for decode — and the filled cache, positioned at t = S)."""
+    logits, cache = prefill_forward(params, cfg, tokens, max_len)
+    return logits[:, -1:], cache
+
+
+def prefill_sequential(params, cfg: ModelConfig, tokens, max_len: int):
+    """Sequential prefill through the decode path, one token at a time.
+
+    O(S) launches — NOT the production path (that is ``prefill``); kept as
+    the cache-exact oracle the serving tests compare the batched dump
+    against, since it exercises exactly the kernels decode will use."""
     B, S = tokens.shape
     cache = init_cache(cfg, B, max_len)
     step = jax.jit(lambda c, tok, t: decode_step(params, c, cfg, tok, t))
@@ -43,11 +64,13 @@ def prefill(params, cfg: ModelConfig, tokens, max_len: int):
 
 
 def generate(params, cfg: ModelConfig, prompt, n_tokens: int,
-             max_len: Optional[int] = None):
-    """Greedy generation. prompt: [B, S] int32. Returns [B, S + n_tokens]."""
+             max_len: Optional[int] = None, *, sequential_prefill=False):
+    """Greedy generation. prompt: [B, S] int32. Returns [B, S + n_tokens].
+    ``sequential_prefill`` routes the pre-PR O(S) prefill loop (oracle)."""
     B, S = prompt.shape
     max_len = max_len or (S + n_tokens)
-    logits, cache = prefill(params, cfg, prompt, max_len)
+    fill = prefill_sequential if sequential_prefill else prefill
+    logits, cache = fill(params, cfg, prompt, max_len)
     tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
     out = [prompt, tok]
     step = jax.jit(lambda c, tk, t: serve_step(params, c, cfg, tk, t))

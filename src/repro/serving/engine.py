@@ -1,0 +1,264 @@
+"""Continuous-batching serving engine over the paged KV cache.
+
+One engine owns: the model params, a ``PageManager`` (host-side page
+accounting, serving/pages.py), the per-layer device pools
+(serving/paged_decode.py) and a fixed bank of ``max_slots`` batch slots.
+Requests are admitted into free slots **mid-flight** — a new sequence's
+prefill lands while older sequences keep decoding — and every step advances
+ALL live slots with one fused ``paged_decode_step`` launch. Finished or
+evicted sequences return their pages to the free-list immediately; the next
+waiting request takes the slot on the following step. This is continuous
+batching in the vLLM sense, minus preemption: admission reserves the
+worst-case page count (prompt + max_new_tokens), so a live sequence can
+never fail to grow and nothing ever needs to be swapped out.
+
+Slot/device contract (shared with ``paged_decode_step``):
+* inactive slots keep an all-null page-table row and length 0 — the fused
+  step writes their K/V into the null page sink and their logits are
+  garbage the engine never reads. Recurrent (SSD/RG-LRU) slot state is
+  likewise garbage for inactive slots and is overwritten at admission.
+* batch-independence: a slot's logits depend only on its own row of
+  (page_table, lengths) and its own pages/state — admitting or evicting a
+  neighbour mid-flight cannot change another sequence's tokens. Pinned by
+  ``tests/test_serving.py``. (MoE configs couple slots through router
+  capacity — the engine works but exact independence holds for dense FFN.)
+
+Prefill is the batched ``prefill_forward`` (one launch per admitted
+request, jit-cached per prompt length) dumped straight into pages; the
+decode loop is one jit-compiled step for the whole bank regardless of how
+many slots are live. Greedy decoding only — sampling is orthogonal to the
+paging/batching machinery this module pins down.
+"""
+from __future__ import annotations
+
+import functools
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import init_model, prefill_forward
+from repro.serving.pages import PageManager, pages_needed
+from repro.serving.paged_decode import (dump_prefill_to_pools,
+                                        init_paged_pools, paged_decode_step)
+
+
+# module-level jitted entry points with the config as a static argument:
+# the compile cache is keyed on (cfg, page_size, use_kernel) and SHARED
+# across engine instances — constructing a second engine for the same
+# model (bench warm-up, tests) must not recompile anything
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "page_size", "use_kernel"))
+def _jit_decode_step(params, pools, token, page_table, lengths, *,
+                     cfg, page_size, use_kernel):
+    return paged_decode_step(params, pools, cfg, token, page_table,
+                             lengths, page_size=page_size,
+                             use_kernel=use_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _jit_prefill(params, tokens, *, cfg):
+    return prefill_forward(params, cfg, tokens, raw_kv=True)
+
+
+@dataclass(frozen=True)
+class Request:
+    """One generation request. ``uid`` is caller-chosen and must be unique
+    among live + waiting requests."""
+    uid: int
+    prompt: np.ndarray                    # [S] int32
+    max_new_tokens: int
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+
+@dataclass
+class _Sequence:
+    """Host-side state of one live slot."""
+    req: Request
+    slot: int
+    n_cached: int                         # tokens whose KV is in pages
+    generated: List[int] = field(default_factory=list)
+
+
+class PagedServingEngine:
+    """Continuous-batching engine. See module docstring for the design."""
+
+    def __init__(self, params, cfg: ModelConfig, *, page_size: int = 16,
+                 n_pages: int = 256, max_slots: int = 4,
+                 max_seq_len: int = 512, eos_id: Optional[int] = None,
+                 use_kernel: bool = False):
+        assert cfg.causal, "serving needs a causal decoder"
+        assert cfg.frontend == "none", "feature-frontend serving unsupported"
+        self.params = params
+        self.cfg = cfg
+        self.page_size = int(page_size)
+        self.max_slots = int(max_slots)
+        self.max_seq_len = int(max_seq_len)
+        self.eos_id = eos_id
+        self.pm = PageManager(n_pages=n_pages, page_size=page_size)
+        self.n_pmax = pages_needed(max_seq_len, page_size)
+        self.pools = init_paged_pools(cfg, n_pages, page_size, max_slots)
+        self.page_table = np.zeros((max_slots, self.n_pmax), np.int32)
+        self.lengths = np.zeros((max_slots,), np.int32)
+        self.free_slots: List[int] = list(range(max_slots - 1, -1, -1))
+        self.live: Dict[int, _Sequence] = {}          # slot -> sequence
+        self.waiting: deque = deque()
+        self.finished: Dict[int, np.ndarray] = {}     # uid -> full tokens
+        self.n_steps = 0
+
+        self._step = functools.partial(
+            _jit_decode_step, cfg=cfg, page_size=self.page_size,
+            use_kernel=use_kernel)
+        self._prefill = functools.partial(_jit_prefill, cfg=cfg)
+
+    # ------------------------------------------------------------- frontend
+    def submit(self, req: Request) -> None:
+        worst = req.prompt_len + req.max_new_tokens
+        if worst > self.max_seq_len:
+            raise ValueError(
+                f"request {req.uid}: prompt {req.prompt_len} + max_new "
+                f"{req.max_new_tokens} exceeds max_seq_len "
+                f"{self.max_seq_len}")
+        if pages_needed(worst, self.page_size) > self.pm.capacity:
+            raise MemoryError(
+                f"request {req.uid} needs "
+                f"{pages_needed(worst, self.page_size)} pages; pool has "
+                f"{self.pm.capacity} — it can never be admitted")
+        assert req.max_new_tokens >= 1
+        self.waiting.append(req)
+
+    def can_admit(self, req: Request) -> bool:
+        return bool(self.free_slots) and \
+            self.pm.can_admit(req.prompt_len + req.max_new_tokens)
+
+    @property
+    def n_live(self) -> int:
+        return len(self.live)
+
+    # ------------------------------------------------------------ admission
+    def _admit(self, req: Request) -> None:
+        slot = self.free_slots.pop()
+        pages = self.pm.admit(req.uid, req.prompt_len,
+                              req.prompt_len + req.max_new_tokens)
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        logits, cache = self._prefill(self.params, tokens=prompt)
+        self.pools = dump_prefill_to_pools(
+            self.pools, cache, self.cfg, slot, pages, self.page_size,
+            req.prompt_len)
+        self.page_table[slot] = self.pm.table_array(req.uid, self.n_pmax)
+        self.lengths[slot] = req.prompt_len
+        seq = _Sequence(req=req, slot=slot, n_cached=req.prompt_len)
+        first = int(jnp.argmax(logits[0, -1]))
+        seq.generated.append(first)
+        self.live[slot] = seq
+        if self._is_finished(seq):
+            self._retire(seq)
+
+    def _is_finished(self, seq: _Sequence) -> bool:
+        if len(seq.generated) >= seq.req.max_new_tokens:
+            return True
+        return self.eos_id is not None and seq.generated[-1] == self.eos_id
+
+    # ------------------------------------------------------------- eviction
+    def _release(self, seq: _Sequence) -> List[int]:
+        freed = self.pm.free_seq(seq.req.uid)
+        self.page_table[seq.slot] = 0
+        self.lengths[seq.slot] = 0
+        del self.live[seq.slot]
+        self.free_slots.append(seq.slot)
+        return freed
+
+    def _retire(self, seq: _Sequence) -> None:
+        self.finished[seq.req.uid] = np.concatenate(
+            [np.asarray(seq.req.prompt, np.int32),
+             np.asarray(seq.generated, np.int32)])
+        self._release(seq)
+
+    def evict(self, uid: int) -> List[int]:
+        """Cancel a live or waiting request mid-flight. Returns the freed
+        page ids (empty for a waiting request). The partial output is
+        recorded in ``finished``."""
+        for seq in list(self.live.values()):
+            if seq.req.uid == uid:
+                self.finished[uid] = np.concatenate(
+                    [np.asarray(seq.req.prompt, np.int32),
+                     np.asarray(seq.generated, np.int32)])
+                return self._release(seq)
+        for req in list(self.waiting):
+            if req.uid == uid:
+                self.waiting.remove(req)
+                self.finished[uid] = np.asarray(req.prompt, np.int32)
+                return []
+        raise KeyError(f"request {uid} is neither live nor waiting")
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> List[int]:
+        """One engine step: admit what fits (FIFO, head-of-line blocking —
+        the packer shapes the queue, the engine does not reorder), then
+        advance every live slot by one token with a single fused launch.
+        Returns the uids that finished this step."""
+        while self.waiting and self.can_admit(self.waiting[0]):
+            self._admit(self.waiting.popleft())
+        if not self.live:
+            return []
+
+        token = np.zeros((self.max_slots, 1), np.int32)
+        for slot, seq in self.live.items():
+            token[slot, 0] = seq.generated[-1]
+            newp = self.pm.append_token(seq.req.uid)
+            if newp is not None:
+                self.page_table[slot, seq.n_cached // self.page_size] = newp
+
+        logits, self.pools = self._step(
+            self.params, self.pools, token=jnp.asarray(token),
+            page_table=jnp.asarray(self.page_table),
+            lengths=jnp.asarray(self.lengths))
+        self.n_steps += 1
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+
+        done = []
+        for slot, seq in list(self.live.items()):
+            seq.n_cached += 1
+            self.lengths[slot] = seq.n_cached
+            seq.generated.append(int(nxt[slot]))
+            if self._is_finished(seq):
+                done.append(seq.req.uid)
+                self._retire(seq)
+        return done
+
+    # ------------------------------------------------------------ batch run
+    def run(self, requests: Sequence[Request]) -> Dict[int, np.ndarray]:
+        """Submit all requests and step until drained. Returns
+        uid -> full token array (prompt + generated)."""
+        for r in requests:
+            self.submit(r)
+        while self.waiting or self.live:
+            before = self.n_live
+            self.step()
+            if not self.live and self.waiting and before == 0 and \
+                    not self.can_admit(self.waiting[0]):
+                raise MemoryError(
+                    f"deadlock: request {self.waiting[0].uid} cannot be "
+                    "admitted into an empty engine")
+        return dict(self.finished)
+
+    def stats(self) -> dict:
+        u = self.pm.utilization()
+        u.update({"n_live": self.n_live, "n_waiting": len(self.waiting),
+                  "n_finished": len(self.finished),
+                  "n_steps": self.n_steps})
+        return u
+
+
+def make_engine(cfg: ModelConfig, *, seed: int = 0, **kw
+                ) -> PagedServingEngine:
+    """Init params + engine in one call (examples/bench)."""
+    params = init_model(jax.random.PRNGKey(seed), cfg)
+    return PagedServingEngine(params, cfg, **kw)

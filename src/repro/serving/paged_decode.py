@@ -1,0 +1,238 @@
+"""Paged decode: one fused step over the active serving batch.
+
+The continuous-batching engine (serving/engine.py) keeps attention K/V in
+fixed-size *pages* owned by a ``PageManager`` (serving/pages.py) instead of
+one contiguous [B, max_len, ...] cache per layer. This module is the device
+side of that design:
+
+* ``init_paged_pools`` — per-layer state, flat (no cycle stacking): attention
+  layers get K/V page pools ``[n_pages, page_size, n_kv, hd]`` shared by
+  every sequence, recurrent layers (SSD / RG-LRU) keep ordinary per-slot
+  dense state ``[max_slots, ...]`` since their cache is O(1) per sequence.
+* ``paged_decode_step`` — ONE jit-able step for the whole slot batch: embed
+  the incoming token per slot, write this step's K/V into each sequence's
+  current page via its page table, attend over the table-gathered history,
+  and return next-token logits plus the updated pools.
+
+Two attention paths:
+* the jnp gather reference (default): ``jnp.take(pool, page_table)`` →
+  reshape to a contiguous [B, n_pmax * page_size, ...] view → masked SDPA.
+  Exact and boring; the parity oracle for the kernel.
+* ``use_kernel=True`` routes ``kernels.ops.paged_decode_attention`` — the
+  Pallas flash-decode kernel whose BlockSpec index map reads the page table
+  from scalar prefetch, so K/V pages stream HBM→VMEM directly by page id
+  with no gathered copy of the history (kernels/paged_decode.py).
+
+Layout/semantics contract (shared with the kernel and the engine):
+* ``page_table``: [max_slots, n_pmax] int32. Row b lists the page ids
+  holding slot b's history in order; unused entries are 0, the reserved
+  *null page* that absorbs inactive-slot writes and is never allocated.
+* ``lengths``: [max_slots] int32 = tokens already cached for the slot. The
+  incoming token takes position ``lengths[b]`` (its page
+  ``page_table[b, lengths[b] // page_size]`` must already be allocated —
+  the engine guarantees this via worst-case reservation at admission).
+* Local-window layers keep their full history in pages like global ones
+  (no ring buffer — pages ARE the paging scheme) and enforce the window by
+  masking positions ``<= t - window``. This trades O(S) pages for the
+  O(W) ring to keep one pool layout; serving windows are small multiples
+  of page_size so the waste is bounded and freed at eviction.
+
+Serving is schedule-free (D2FT gates training only), but the kernel path
+accepts per-(slot, head) forward gates so gate-elided adapters serve
+through the same entry (see kernels/paged_decode.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN_GLOBAL, ATTN_LOCAL, RGLRU, SSD, ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import apply_embedding, apply_mlp, apply_norm, softcap
+from repro.models.transformer import layer_groups
+
+
+# ---------------------------------------------------------- per-layer slicing
+def layer_params(params, cfg: ModelConfig, i: int):
+    """Flat view of layer i's params from the cycle-stacked tree.
+
+    Layers 0..n_cycles*P-1 live stacked in ``params["cycles"][j]`` (leading
+    dim = cycle); the remainder in ``params["rest"]``. The paged engine is
+    unrolled per layer (each layer owns a differently-shaped pool), so it
+    needs this flat addressing rather than the scan layout."""
+    n_cycles, pat, _ = layer_groups(cfg)
+    P = len(pat)
+    if i < n_cycles * P:
+        c, j = divmod(i, P)
+        return jax.tree.map(lambda a: a[c], params["cycles"][j])
+    return params["rest"][i - n_cycles * P]
+
+
+def layer_cache_entry(cache, cfg: ModelConfig, i: int):
+    """Same flat addressing for a prefill cache (``prefill_forward`` output,
+    which stacks per-cycle entries exactly like params)."""
+    return layer_params(cache, cfg, i)
+
+
+# ----------------------------------------------------------------- pool init
+def init_paged_pools(cfg: ModelConfig, n_pages: int, page_size: int,
+                     max_slots: int) -> List[Dict[str, Any]]:
+    """Per-layer device state, flat list of length n_layers.
+
+    Attention layers: ``{"k","v"}: [n_pages, page_size, n_kv, hd]`` — page 0
+    is the null page (write sink for inactive slots, table padding).
+    SSD / RG-LRU layers: the ordinary dense decode cache at batch=max_slots
+    (their per-sequence state is O(1), nothing to page)."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    pools: List[Dict[str, Any]] = []
+    for kind in cfg.layer_kinds:
+        if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+            shape = (n_pages, page_size, cfg.n_kv_heads,
+                     cfg.resolved_head_dim)
+            pools.append({"k": jnp.zeros(shape, dtype),
+                          "v": jnp.zeros(shape, dtype)})
+        elif kind == SSD:
+            pools.append(ssm_mod.init_ssd_cache(max_slots, cfg.d_model,
+                                                cfg.ssm, dtype))
+        elif kind == RGLRU:
+            pools.append(rglru_mod.init_rglru_cache(max_slots, cfg.d_model,
+                                                    cfg.rglru, dtype))
+        else:
+            raise ValueError(kind)
+    return pools
+
+
+# ------------------------------------------------------- reference attention
+def paged_attention_ref(q, k_pages, v_pages, page_table, lengths, *,
+                        window: int = 0):
+    """Gather-based paged attention, the kernel's parity oracle.
+
+    q: [B, 1, H, hd] (post-rope); pools: [n_pages, page_size, n_kv, hd];
+    page_table: [B, n_pmax] int32; lengths: [B] int32 — the query token sits
+    at position ``lengths[b]`` and its K/V is already written. Attends over
+    positions <= lengths[b] (window-masked for local layers).
+    Returns [B, 1, H, hd]."""
+    B = q.shape[0]
+    n_pmax = page_table.shape[1]
+    ps = k_pages.shape[1]
+    # [B, n_pmax, ps, n_kv, hd] -> contiguous-history view [B, L, n_kv, hd]
+    keys = jnp.take(k_pages, page_table, axis=0)
+    vals = jnp.take(v_pages, page_table, axis=0)
+    keys = keys.reshape(B, n_pmax * ps, *k_pages.shape[2:])
+    vals = vals.reshape(B, n_pmax * ps, *v_pages.shape[2:])
+    pos = jnp.arange(n_pmax * ps)[None, :]
+    t = lengths[:, None]
+    valid = pos <= t
+    if window and window > 0:
+        valid &= pos > t - window
+    return attn._sdpa(q, keys, vals, valid[:, None, None, :])
+
+
+# ------------------------------------------------------------ the fused step
+def _write_kv(pool, kv, page_table, lengths, page_size: int):
+    """Scatter this step's per-slot K (or V) [B, 1, n_kv, hd] into each
+    slot's current page. Inactive slots (table row all-null) write into
+    page 0, the designated sink."""
+    B = kv.shape[0]
+    pidx = page_table[jnp.arange(B), lengths // page_size]      # [B]
+    off = lengths % page_size                                    # [B]
+    return pool.at[pidx, off].set(kv[:, 0])
+
+
+def paged_decode_step(params, pools, cfg: ModelConfig, token, page_table,
+                      lengths, *, page_size: int, use_kernel: bool = False,
+                      interpret: Optional[bool] = None):
+    """One decode step for the whole slot batch.
+
+    token: [B, 1] int32 (B = max_slots); page_table: [B, n_pmax] int32;
+    lengths: [B] int32 (see module docstring for the contract). Returns
+    (logits [B, 1, vocab], new_pools). Slots whose table row is all-null
+    produce garbage logits the engine ignores — there is no active mask on
+    device, inactivity is purely a bookkeeping notion."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B = token.shape[0]
+    x = apply_embedding(params["embed"], token).astype(cdt)
+
+    new_pools = []
+    for i, kind in enumerate(cfg.layer_kinds):
+        p = layer_params(params, cfg, i)
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+            window = cfg.window if kind == ATTN_LOCAL else 0
+            hd = cfg.resolved_head_dim
+            q, k, v = attn._project_qkv(p["attn"], h, cfg.n_heads,
+                                        cfg.n_kv_heads, hd)
+            if cfg.rope:
+                pos = lengths[:, None]                          # [B, 1]
+                q = attn.apply_rope(q, pos, cfg.rope_theta)
+                k = attn.apply_rope(k, pos, cfg.rope_theta)
+            kp = _write_kv(pools[i]["k"], k, page_table, lengths, page_size)
+            vp = _write_kv(pools[i]["v"], v, page_table, lengths, page_size)
+            if use_kernel:
+                from repro.kernels.ops import paged_decode_attention
+                out = paged_decode_attention(
+                    q[:, 0], kp, vp, page_table, lengths,
+                    window=window, interpret=interpret)[:, None]
+            else:
+                out = paged_attention_ref(q, kp, vp, page_table, lengths,
+                                          window=window)
+            y = out.reshape(B, 1, cfg.n_heads * hd) @ p["attn"]["wo"]
+            new_pools.append({"k": kp, "v": vp})
+        elif kind == SSD:
+            y, nc = ssm_mod.decode_ssd(p["ssd"], pools[i], h, cfg.d_model,
+                                       cfg.ssm)
+            new_pools.append(nc)
+        elif kind == RGLRU:
+            y, nc = rglru_mod.decode_rglru(p["rglru"], pools[i], h,
+                                           cfg.rglru)
+            new_pools.append(nc)
+        else:
+            raise ValueError(kind)
+        x = x + y
+        if "norm2" in p:
+            h2 = apply_norm(p["norm2"], x, cfg.norm)
+            if "moe" in p:
+                y2, _ = moe_mod.apply_moe(p["moe"], h2, cfg.moe,
+                                          act=cfg.mlp_act)
+            else:
+                y2 = apply_mlp(p["mlp"], h2, cfg.mlp_act, cfg.mlp_gated)
+            x = x + y2
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T.astype(cdt)
+    else:
+        logits = x @ params["unembed"].astype(cdt)
+    return softcap(logits, cfg.logit_softcap), new_pools
+
+
+# --------------------------------------------------------- prefill page dump
+def dump_prefill_to_pools(pools, cache, cfg: ModelConfig, slot: int,
+                          pages: List[int], page_size: int, seq_len: int):
+    """Write one sequence's prefill cache (``prefill_forward(raw_kv=True)``,
+    batch 1) into the paged pools: attention K/V chunked into the given
+    pages, recurrent state into row ``slot``. Returns new pools."""
+    n = len(pages)
+    assert n * page_size >= seq_len, (n, page_size, seq_len)
+    page_ids = jnp.asarray(pages, jnp.int32)
+    new_pools = []
+    for i, kind in enumerate(cfg.layer_kinds):
+        entry = layer_cache_entry(cache, cfg, i)
+        if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+            def paged(full, pool):
+                # [S, n_kv, hd] -> [n, page_size, n_kv, hd], zero-padded tail
+                pad = n * page_size - seq_len
+                chunks = jnp.pad(full[0], ((0, pad), (0, 0), (0, 0)))
+                chunks = chunks.reshape(n, page_size, *full.shape[2:])
+                return pool.at[page_ids].set(chunks)
+            new_pools.append({"k": paged(entry["k"], pools[i]["k"]),
+                              "v": paged(entry["v"], pools[i]["v"])})
+        else:
+            new_pools.append(jax.tree.map(
+                lambda pool, st: pool.at[slot].set(st[0]), pools[i], entry))
+    return new_pools

@@ -1,0 +1,138 @@
+"""Property-based invariants for the paged-KV page manager and the request
+packer (hypothesis; skipped cleanly when it is not installed — CI installs
+it via requirements.txt, see conftest.optional_hypothesis).
+
+* random admit/append/free traces keep the ``PageManager`` invariants at
+  every step: no page owned twice, the null page never handed out, pages
+  conserved (owned + free == capacity), reservations within the free pool,
+  table sizes consistent with lengths;
+* alloc/free is a bijection: evicting a sequence returns exactly the pages
+  it was ever given, and draining everything restores the full free pool
+  in the same set (LIFO discipline aside);
+* ``can_admit`` is exact under reservations: an admit gated on it never
+  raises, and growth after admission (within the reserved worst case)
+  never fails;
+* ``plan_waves`` partitions the request indices exactly once, never
+  overflows the page budget or the slot count per wave, and is
+  deterministic.
+"""
+import numpy as np
+import pytest
+
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
+
+from repro.serving.packer import plan_waves, worst_case_pages
+from repro.serving.pages import PageManager, pages_needed
+
+
+@st.composite
+def traces(draw):
+    """(n_pages, page_size, ops) — ops interleave admit/append/free with
+    caller-side can_admit gating, the engine's usage pattern."""
+    n_pages = draw(st.integers(2, 24))
+    page_size = draw(st.integers(1, 8))
+    ops = draw(st.lists(
+        st.one_of(
+            st.tuples(st.just("admit"), st.integers(0, 30),
+                      st.integers(0, 12)),     # prompt tokens, extra budget
+            st.tuples(st.just("append"), st.integers(0, 5)),  # victim rank
+            st.tuples(st.just("free"), st.integers(0, 5)),
+        ), min_size=1, max_size=40))
+    return n_pages, page_size, ops
+
+
+@settings(max_examples=60, deadline=None)
+@given(traces())
+def test_page_manager_trace_invariants(trace):
+    n_pages, page_size, ops = trace
+    pm = PageManager(n_pages=n_pages, page_size=page_size)
+    granted = {}                       # seq -> set of pages ever granted
+    next_id = 0
+    for op in ops:
+        if op[0] == "admit":
+            _, n_tokens, extra = op
+            worst = n_tokens + extra
+            if pm.can_admit(worst):
+                pages = pm.admit(next_id, n_tokens, worst)
+                assert len(pages) == pages_needed(n_tokens, page_size)
+                granted[next_id] = set(pages)
+                next_id += 1
+        elif op[0] == "append":
+            live = sorted(pm.tables)
+            if live:
+                sid = live[op[1] % len(live)]
+                # growth within the admitted worst case cannot fail
+                if pm.reserved[sid] > 0 or pages_needed(
+                        pm.lengths[sid] + 1, page_size) <= \
+                        len(pm.tables[sid]):
+                    page = pm.append_token(sid)
+                    if page is not None:
+                        assert page not in granted[sid]
+                        granted[sid].add(page)
+        elif op[0] == "free":
+            live = sorted(pm.tables)
+            if live:
+                sid = live[op[1] % len(live)]
+                freed = pm.free_seq(sid)
+                # alloc/free bijection: exactly the pages ever granted
+                assert set(freed) == granted.pop(sid)
+        pm.check()
+    # drain: every sequence returns its pages; the pool is whole again
+    for sid in sorted(pm.tables):
+        assert set(pm.free_seq(sid)) == granted.pop(sid)
+        pm.check()
+    assert pm.n_free == pm.capacity
+    assert pm.n_reserved == 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 40), st.integers(1, 8),
+       st.lists(st.integers(0, 40), min_size=0, max_size=12))
+def test_can_admit_is_exact(n_pages, page_size, sizes):
+    """Admission gated on can_admit never raises, and its verdict matches
+    first-principles accounting of free minus reserved pages."""
+    pm = PageManager(n_pages=n_pages, page_size=page_size)
+    for i, n in enumerate(sizes):
+        expect = pm.n_free - pm.n_reserved >= pages_needed(n, page_size)
+        assert pm.can_admit(n) == expect
+        if expect:
+            pm.admit(i, n, n)
+            pm.check()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 64), st.integers(1, 32)),
+                min_size=1, max_size=16),
+       st.integers(2, 8), st.integers(1, 8))
+def test_plan_waves_partitions_within_budget(reqs, page_size, max_slots):
+    budget = max(worst_case_pages(s, m, page_size) for s, m in reqs)
+    budget = max(budget, 4)
+    waves = plan_waves(reqs, page_size=page_size, page_budget=budget,
+                       max_slots=max_slots)
+    flat = [i for w in waves for i in w]
+    assert sorted(flat) == list(range(len(reqs)))     # exact partition
+    for w in waves:
+        assert len(w) <= max_slots
+        assert sum(worst_case_pages(*reqs[i], page_size)
+                   for i in w) <= budget
+    again = plan_waves(reqs, page_size=page_size, page_budget=budget,
+                       max_slots=max_slots)
+    assert waves == again                              # deterministic
+
+
+def test_plan_waves_rejects_unservable_request():
+    with pytest.raises(ValueError, match="exceed the page budget"):
+        plan_waves([(100, 10)], page_size=1, page_budget=8, max_slots=4)
+
+
+def test_table_array_null_padding():
+    pm = PageManager(n_pages=16, page_size=4)
+    pm.admit(7, 10, 20)
+    row = pm.table_array(7, width=8)
+    n = pages_needed(10, 4)
+    assert row.dtype == np.int32
+    assert list(row[:n]) == pm.tables[7]
+    assert not row[n:].any(), "padding must be the null page 0"
+    assert 0 not in row[:n]
