@@ -2,19 +2,26 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-multidevice test-kernels test-serving bench \
-	bench-json bench-check docs-check quickstart
+.PHONY: test test-fast test-multidevice test-faults test-kernels \
+	test-serving bench bench-json bench-check docs-check quickstart
 
 test:
 	$(PY) -m pytest -x -q
 
 # the tier-1 CI lane: everything except the slow 8-host-device subprocess
-# parity tests (those run via test-multidevice / the `multidevice` CI job)
+# suites (those run via test-multidevice / test-faults in their own CI
+# jobs with their own wall-clock budgets)
 test-fast:
-	$(PY) -m pytest -x -q -m "not multidevice"
+	$(PY) -m pytest -x -q -m "not multidevice and not faults"
 
 test-multidevice:
 	$(PY) -m pytest -x -q -m multidevice
+
+# the elastic fault matrix: straggler replanning, dropout recovery,
+# NaN-burst guard, lo-fi fallback on 8 emulated devices
+# (tests/_fault_matrix.py via tests/test_faults.py; docs/robustness.md)
+test-faults:
+	$(PY) -m pytest -x -q -m faults
 
 test-kernels:
 	$(PY) -m pytest -x -q tests/test_kernels.py tests/test_kernel_grads.py \
@@ -33,10 +40,12 @@ bench:
 # executed-FLOP fraction, dispatched-bytes fraction per op mix),
 # BENCH_distributed_step.json (per-device all-reduce bytes, paper-mix vs
 # all-p_f, schedule x sync-mode matrix incl. ZeRO-1/ZeRO-3, on an
-# 8-host-device mesh) and BENCH_serving.json (paged-KV continuous-batching
+# 8-host-device mesh), BENCH_elastic.json (straggler mitigation ratio,
+# dropout recovery parity, NaN-guard skip accounting, lo-fi fallback;
+# docs/robustness.md) and BENCH_serving.json (paged-KV continuous-batching
 # throughput, per-token latency, knapsack wave plan, page occupancy)
 bench-json:
-	$(PY) -m benchmarks.run --only kernel_backward,distributed_step,serving
+	$(PY) -m benchmarks.run --only kernel_backward,distributed_step,elastic,serving
 
 # regenerate the snapshots AND gate them against the committed baselines
 # (benchmarks/bench_baselines.json) — what the CI `bench` job enforces

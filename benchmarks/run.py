@@ -427,6 +427,34 @@ def bench_distributed_step():
     sys.stderr.write(proc.stderr)
 
 
+# ------------------------------------------ elastic fault-tolerance matrix
+def bench_elastic():
+    """The four fault scenarios of docs/robustness.md through the elastic
+    loop on an 8-host-device CPU mesh: straggler-aware replanning
+    (mitigation ratio of the capacity-constrained makespan), device-dropout
+    recovery (steps replayed + resume-parity error vs a survivors-only
+    run), the NaN-burst gradient guard (steps skipped + loss gap vs the
+    fault-free run), and the lo-fi local fallback after dropped sync
+    rounds (merge count + progress). Runs ``benchmarks/elastic.py`` in a
+    subprocess because the forced host-device count must be set before jax
+    initializes. Writes ``BENCH_elastic.json`` (gated by
+    ``tools/check_bench.py``)."""
+    import os
+    import subprocess
+
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run([sys.executable, "-m", "benchmarks.elastic"],
+                          env=env, capture_output=True, text=True)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stdout + proc.stderr)
+        raise RuntimeError("benchmarks.elastic failed")
+    for line in proc.stdout.splitlines():
+        if line.strip():
+            print(line)
+    sys.stderr.write(proc.stderr)
+
+
 # ---------------------------------------------- paged-KV serving throughput
 def bench_serving():
     """Gate-aware serving: a synthetic mixed-length request trace through
@@ -454,6 +482,7 @@ BENCHES = {
     "packed_flops": bench_packed_flops,
     "kernel_backward": bench_kernel_backward,
     "distributed_step": bench_distributed_step,
+    "elastic": bench_elastic,
     "serving": bench_serving,
 }
 

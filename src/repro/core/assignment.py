@@ -223,6 +223,32 @@ def plan_device_assignment(sched: Schedule, n_devices: int, capacities=None,
     return assignment, rebalance_report(assignment)
 
 
+def speed_capacities(costs, unit_times, slack: float = 1.1) -> np.ndarray:
+    """[K] per-device cost budgets C_k from measured per-unit step times.
+
+    The elastic loop's straggler mitigation: device k's share of the total
+    schedule cost is proportional to its *speed* 1/u_k (u_k = the EMA of
+    measured step time per unit of assigned cost), so a 2x-slow straggler
+    gets half the budget of a healthy device and the knapsack shifts
+    p_f-heavy micro-batches off it. ``slack`` > 1 keeps the capacities
+    jointly feasible (sum C_k = slack * total cost) — the assigner treats
+    a violated capacity as a report entry, not an error, so slack only
+    shapes how hard the LPT seed and the refinement push."""
+    costs = np.asarray(costs, np.float64)
+    u = np.asarray(unit_times, np.float64)
+    assert (u > 0).all(), f"unit times must be positive, got {u}"
+    speed = 1.0 / u
+    return slack * float(costs.sum()) * speed / speed.sum()
+
+
+def weighted_makespan(assignment: DeviceAssignment,
+                      unit_times) -> float:
+    """Predicted step time under heterogeneous speeds: the slowest
+    device's (assigned cost x per-unit time)."""
+    u = np.asarray(unit_times, np.float64)
+    return float((assignment.loads * u).max())
+
+
 # ----------------------------------------------- execution-layer bridging
 def device_sample_order(assignment: DeviceAssignment, mb_of: np.ndarray
                         ) -> np.ndarray:

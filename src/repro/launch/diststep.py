@@ -34,6 +34,7 @@ from typing import Optional, Tuple
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.assignment import (device_sample_order,
@@ -295,5 +296,165 @@ def measure_distributed_step(n_devices: int = 8, *,
         # the lowered evidence that the gathers exist (and were counted)
         "n_all_gather_ops": z3["collectives_n"].get("all-gather", 0),
         "opt_memory_fraction": z3["opt_memory"]["fraction"],
+    }
+    return record
+
+
+def measure_elastic(n_devices: int = 8, *, seed: int = 0) -> dict:
+    """Execute the four elastic fault scenarios of docs/robustness.md on an
+    n-device host mesh and record the acceptance metrics for
+    ``BENCH_elastic.json``:
+
+    * ``straggler`` — a 2x-slow device under per-refresh replanning: the
+      mitigation ratio (capacity-constrained makespan / balanced makespan,
+      both priced at the measured per-device speeds) must stay < 1;
+    * ``dropout`` — a mid-run device loss: how many steps the recovery
+      replays from the last step-level checkpoint, and the max param /
+      optimizer-state difference vs a fresh survivors-only resume of the
+      SAME checkpoint (the bit-exactness claim, <= 1e-6);
+    * ``nan_guard`` — an injected NaN/inf gradient burst: steps skipped by
+      the pre-sync guard and the final-loss gap vs the fault-free run,
+      normalised by the clean run's total loss drop;
+    * ``lofi`` — dropped sync rounds past the threshold: the fallback
+      step, the lo-fi merge count, and that training still makes progress.
+
+    Same process contract as ``measure_distributed_step``: the caller must
+    provide the devices (``benchmarks/elastic.py`` forces the host device
+    count before importing jax). Everything is seeded — the scenario
+    outcomes are deterministic and tightly gated by
+    ``benchmarks/bench_baselines.json``; only the ``wall_s`` timings vary.
+    """
+    import tempfile
+
+    from repro.configs.base import D2FTConfig
+    from repro.launch.faults import FaultPlan
+    from repro.optim.optimizers import sgd
+    from repro.train.elastic import ElasticConfig, finetune_elastic
+
+    cfg = ModelConfig(name="elastic", arch_type="dense", n_layers=4,
+                      d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                      vocab_size=256)
+    d2 = D2FTConfig(n_microbatches=16, n_pf=6, n_po=4, head_groups=4)
+    B, S = 32, 16
+    mesh = make_data_mesh(n_devices)
+    params = init_model(jax.random.PRNGKey(seed), cfg)
+
+    def batches(n):
+        return list(lm_batches(seed, cfg.vocab_size, batch=B, seq=S,
+                               steps=n))
+
+    def copy(tree):
+        return jax.tree.map(jnp.copy, tree)
+
+    def maxdiff(a, b):
+        return max(jax.tree.leaves(jax.tree.map(
+            lambda x, y: float(jnp.abs(x - y).max()), a, b)))
+
+    record = {
+        "n_devices": n_devices, "seed": seed,
+        "model": {"name": cfg.name, "n_layers": cfg.n_layers,
+                  "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+                  "d_ff": cfg.d_ff, "vocab": cfg.vocab_size},
+        "shape": {"batch": B, "seq": S,
+                  "n_microbatches": d2.n_microbatches},
+        "backend": jax.default_backend(),
+    }
+
+    # -- straggler: device 3 runs 2x slow, refresh every 2 steps ---------
+    t0 = time.perf_counter()
+    el = ElasticConfig(refresh_every=2, ckpt_every=0,
+                       ckpt_dir=tempfile.mkdtemp())
+    _, _, log_s = finetune_elastic(copy(params), cfg, d2, sgd(0.1),
+                                   batches(5), steps=5, mesh=mesh,
+                                   faults=FaultPlan(slowdowns=((3, 2.0),)),
+                                   elastic=el)
+    refreshes = log_s.extras["refreshes"]
+    mitigated = [r for r in refreshes
+                 if r["elastic"].get("capacities") is not None]
+    m = mitigated[-1]["elastic"]
+    record["straggler"] = {
+        "n_refreshes": len(refreshes),
+        "n_capacity_refreshes": len(mitigated),
+        "straggler_unit_time": m["unit_times"][3],
+        "makespan": m["makespan"],
+        "unmitigated_makespan": m["unmitigated_makespan"],
+        "mitigation_ratio": m["mitigation_ratio"],
+        "load_spread": mitigated[-1]["rebalance"]["spread"],
+        "wall_s": round(time.perf_counter() - t0, 2),
+    }
+
+    # -- dropout: lose device 3 at step 5, recover onto the survivors ----
+    t0 = time.perf_counter()
+    opt = adamw(1e-3)
+    el = ElasticConfig(refresh_every=4, ckpt_every=2,
+                       ckpt_dir=tempfile.mkdtemp())
+    p_a, s_a, log_a = finetune_elastic(copy(params), cfg, d2, opt,
+                                       batches(6), steps=6, mesh=mesh,
+                                       faults=FaultPlan(dropout=(3, 5)),
+                                       elastic=el)
+    rec = [e for e in log_a.extras["elastic"]["events"]
+           if e["type"] == "dropout_recovery"][0]
+    el_b = ElasticConfig(refresh_every=4, ckpt_every=2,
+                         ckpt_dir=tempfile.mkdtemp())
+    p_b, s_b, _ = finetune_elastic(copy(params), cfg, d2, opt,
+                                   batches(6), steps=6,
+                                   mesh=make_data_mesh(rec["n_devices"]),
+                                   elastic=el_b, resume_from=rec["ckpt"])
+    record["dropout"] = {
+        "recovery_steps": rec["recovery_steps"],
+        "ckpt_step": rec["ckpt_step"],
+        "n_devices_after": rec["n_devices"],
+        "resume_parity_diff": maxdiff(p_a, p_b),
+        "resume_opt_diff": maxdiff(s_a, s_b),
+        "wall_s": round(time.perf_counter() - t0, 2),
+    }
+
+    # -- NaN burst: device 2 at step 1, device 3 at step 6 ---------------
+    t0 = time.perf_counter()
+    fp = FaultPlan(grad_faults=((2, 1, float("nan")),
+                                (3, 6, float("inf"))))
+    el = ElasticConfig(refresh_every=0, ckpt_every=0,
+                       ckpt_dir=tempfile.mkdtemp())
+    _, _, log_f = finetune_elastic(copy(params), cfg, d2, sgd(0.1),
+                                   batches(8), steps=8, mesh=mesh,
+                                   faults=fp, elastic=el)
+    el = ElasticConfig(refresh_every=0, ckpt_every=0,
+                       ckpt_dir=tempfile.mkdtemp())
+    _, _, log_c = finetune_elastic(copy(params), cfg, d2, sgd(0.1),
+                                   batches(8), steps=8, mesh=mesh,
+                                   elastic=el)
+    gap = abs(log_f.losses[-1] - log_c.losses[-1])
+    drop = log_c.losses[0] - log_c.losses[-1]
+    record["nan_guard"] = {
+        "steps_skipped": log_f.extras["elastic"]["guard_skips"],
+        "skip_steps": [e["step"]
+                       for e in log_f.extras["elastic"]["events"]
+                       if e["type"] == "guard_skip"],
+        "final_loss_faulted": round(log_f.losses[-1], 6),
+        "final_loss_clean": round(log_c.losses[-1], 6),
+        "loss_gap": round(gap, 6),
+        "clean_loss_drop": round(drop, 6),
+        "gap_fraction": round(gap / drop, 6) if drop > 0 else 0.0,
+        "wall_s": round(time.perf_counter() - t0, 2),
+    }
+
+    # -- dropped syncs: 2 lost rounds engage the lo-fi local fallback ----
+    t0 = time.perf_counter()
+    el = ElasticConfig(refresh_every=0, ckpt_every=0, merge_every=2,
+                       sync_fault_threshold=2,
+                       ckpt_dir=tempfile.mkdtemp())
+    _, _, log_l = finetune_elastic(copy(params), cfg, d2, sgd(0.1),
+                                   batches(8), steps=8, mesh=mesh,
+                                   faults=FaultPlan(dropped_syncs=(1, 2)),
+                                   elastic=el)
+    ev = log_l.extras["elastic"]
+    fb = [e for e in ev["events"] if e["type"] == "lofi_fallback"][0]
+    record["lofi"] = {
+        "fallback_step": fb["step"],
+        "sync_drops": ev["sync_faults"],
+        "n_merges": ev["merges"],
+        "final_mode_local": 1 if ev["final_mode"] == "local" else 0,
+        "loss_drop": round(log_l.losses[0] - log_l.losses[-1], 6),
+        "wall_s": round(time.perf_counter() - t0, 2),
     }
     return record

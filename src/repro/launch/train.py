@@ -50,14 +50,18 @@ def main():
                     help="route attention through the compacted Pallas "
                          "gated kernel path (single-device or per-shard "
                          "with --distributed; interpret mode on CPU)")
-    ap.add_argument("--sync-mode", choices=("masked", "zero", "zero3"),
+    ap.add_argument("--sync-mode",
+                    choices=("masked", "zero", "zero3", "local"),
                     default="masked",
                     help="distributed gradient sync: 'masked' = schedule-"
                          "masked psum (replicated optimizer state), "
                          "'zero' = ZeRO-1 sliced reduce-scatter/all-gather "
                          "with optimizer moments sharded ~1/n_devices, "
                          "'zero3' = fully sharded params with the "
-                         "schedule-masked (gate-elided) forward gather")
+                         "schedule-masked (gate-elided) forward gather, "
+                         "'local' = lo-fi zero-sync replicas merged every "
+                         "--merge-every steps (requires --elastic; see "
+                         "docs/robustness.md)")
     ap.add_argument("--refresh-every", type=int, default=None,
                     help="re-plan the schedule (and re-run the knapsack "
                          "device assigner, rebuild the sync plan) every "
@@ -69,6 +73,30 @@ def main():
                     help="full-size config on the production mesh "
                          "(requires a pod)")
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--elastic", action="store_true",
+                    help="run the fault-tolerant elastic loop "
+                         "(train.elastic.finetune_elastic): straggler-"
+                         "aware replanning, dropout recovery from step-"
+                         "level checkpoints, NaN-burst gradient guard, "
+                         "lo-fi sync fallback (docs/robustness.md); "
+                         "requires --distributed")
+    ap.add_argument("--faults", default=None, metavar="PATH.json",
+                    help="inject a deterministic FaultPlan from a JSON "
+                         "file (launch.faults.FaultPlan.to_json) into the "
+                         "elastic loop — slowdowns, a device dropout, "
+                         "gradient bursts, dropped sync rounds")
+    ap.add_argument("--ckpt-every", type=int, default=1,
+                    help="elastic step-level checkpoint cadence (steps); "
+                         "0 disables periodic checkpoints")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="directory for elastic step-level checkpoints "
+                         "(default: a fresh temp dir)")
+    ap.add_argument("--merge-every", type=int, default=4,
+                    help="lo-fi local-mode weight-merge cadence (steps)")
+    ap.add_argument("--resume-from", default=None, metavar="CKPT.npz",
+                    help="resume the elastic loop from a step-level "
+                         "checkpoint (save_train_state format), on the "
+                         "original mesh size or a shrunk one")
     args = ap.parse_args()
 
     if args.full:
@@ -90,6 +118,13 @@ def main():
                                  or args.refresh_every is not None):
         raise SystemExit("--sync-mode/--refresh-every only apply to the "
                          "--distributed path")
+    if not args.elastic and (args.faults or args.resume_from
+                             or args.sync_mode == "local"):
+        raise SystemExit("--faults/--resume-from/--sync-mode local require "
+                         "--elastic (the plain distributed loop has no "
+                         "fault handling)")
+    if args.elastic and not args.distributed:
+        raise SystemExit("--elastic requires --distributed")
 
     d2 = None
     if args.d2ft:
@@ -121,22 +156,52 @@ def main():
             raise SystemExit(
                 f"--batch must be divisible by --n-microbatches: "
                 f"{args.batch} % {args.n_microbatches} != 0")
-        params, opt_state, log = finetune_distributed(
-            params, cfg, d2, opt, batches, steps=args.steps, mesh=mesh,
-            use_kernel=args.kernel, sync_mode=args.sync_mode,
-            refresh_every=args.refresh_every)
-        rep, sync = log.extras["rebalance"], log.extras["sync"]
+        if args.elastic:
+            from repro.launch.faults import FaultPlan
+            from repro.train.elastic import ElasticConfig, finetune_elastic
+            fp = None
+            if args.faults:
+                with open(args.faults) as f:
+                    fp = FaultPlan.from_json(f.read())
+            el = ElasticConfig(refresh_every=args.refresh_every,
+                               ckpt_every=args.ckpt_every,
+                               ckpt_dir=args.ckpt_dir,
+                               merge_every=args.merge_every)
+            params, opt_state, log = finetune_elastic(
+                params, cfg, d2, opt, batches, steps=args.steps,
+                mesh=mesh, sync_mode=args.sync_mode, faults=fp,
+                elastic=el, use_kernel=args.kernel,
+                resume_from=args.resume_from)
+            ev = log.extras["elastic"]
+            print(f"elastic: final_mode={ev['final_mode']} "
+                  f"devices={ev['n_devices']} "
+                  f"guard_skips={ev['guard_skips']} "
+                  f"sync_faults={ev['sync_faults']} "
+                  f"merges={ev['merges']}")
+            for e in ev["events"]:
+                print(f"  event: {e}")
+            print(f"last checkpoint: {ev['last_ckpt']}")
+        else:
+            params, opt_state, log = finetune_distributed(
+                params, cfg, d2, opt, batches, steps=args.steps,
+                mesh=mesh, use_kernel=args.kernel,
+                sync_mode=args.sync_mode,
+                refresh_every=args.refresh_every)
+        rep, sync = log.extras["rebalance"], log.extras.get("sync")
         print(f"assignment: loads {rep['loads']} spread {rep['spread']} "
               f"imbalance {rep['imbalance']:.3f} "
               f"({len(log.extras.get('refreshes', []))} replans)")
-        if args.sync_mode in ("zero", "zero3"):
+        if sync is None:
+            print("grad sync: none (lo-fi local replicas, merged "
+                  f"every {args.merge_every} steps)")
+        elif args.sync_mode in ("zero", "zero3"):
             print(f"grad sync ({args.sync_mode}): {sync['fraction']:.0%} "
                   f"all-reduce-equivalent bytes ({sync['n_zero']} leaves "
                   f"partitioned over {ndev} shards, "
                   f"rs {sync['rs_bytes']:.2e}B / "
                   f"ag {sync['ag_bytes']:.2e}B)")
-            if args.sync_mode == "zero3":
-                z3 = log.extras["zero3_params"]
+            z3 = log.extras.get("zero3_params")
+            if args.sync_mode == "zero3" and z3 is not None:
                 print(f"param residency (zero3): "
                       f"{z3['fraction']:.0%} of replicated peak "
                       f"({z3['n_gather_elided']} forward-dead gathers "

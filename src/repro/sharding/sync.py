@@ -405,6 +405,59 @@ def apply_grad_sync(grads, plan, axis_name: str):
     return [apply_grad_sync(g, p, axis_name) for g, p in zip(grads, plan)]
 
 
+# ------------------------------------------------------ lo-fi local sync
+def stack_replicas(tree, n: int):
+    """Replicated tree -> per-replica stacked tree ([n, ...] leaves): the
+    state layout of ``sync_mode="local"``, where each replica fine-tunes
+    its own copy with zero gradient sync between merges."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None],
+                                                   (n,) + x.shape), tree)
+
+
+def _merge_leaf(x, spec: SyncSpec):
+    """[R, ...] stacked replica leaf -> merged single leaf.
+
+    The lo-fi merge rule: slices with a live backward anywhere in the
+    mask diverge across replicas and are averaged; dead slices received
+    identically-zero grads on every replica, so their copies are still
+    bit-identical and replica 0 IS the merged value — taking it (instead
+    of a mean) keeps dead slices bit-stable and models the wire saving
+    (dead slices never need to move)."""
+    if spec.mode == "none":
+        return x[0]
+    if spec.mode == "all":
+        return x.mean(axis=0)
+    if spec.mode == "stacked":
+        return jnp.stack([_merge_leaf(x[:, c], s)
+                          for c, s in enumerate(spec.per_cycle)])
+    assert spec.mode == "sliced", spec.mode
+    blocks = len(spec.live)
+    axis = spec.axis + 1                       # leaf axes shift past [R]
+    size = x.shape[axis] // blocks
+    parts = []
+    for is_live, start, stop in _runs(spec.live):
+        seg = jax.lax.slice_in_dim(x, start * size, stop * size, axis=axis)
+        parts.append(seg.mean(axis=0) if is_live else seg[0])
+    return jnp.concatenate(parts, axis=spec.axis) if len(parts) > 1 \
+        else parts[0]
+
+
+def lofi_merge(stacked, plan):
+    """Merge per-replica stacked state under a masked-mode sync plan.
+
+    ``plan`` should be built from the union of every schedule that was
+    active since the replicas were last in sync (the elastic loop tracks
+    that as ``live_since_merge``): a subnet live under ANY of them may
+    have diverged and must be averaged; a subnet dead under all of them
+    is still replica-identical and is passed through from replica 0.
+    ``sync_byte_report(plan, params)`` prices the merge's wire bytes."""
+    if isinstance(plan, SyncSpec):
+        return _merge_leaf(stacked, plan)
+    if isinstance(plan, dict):
+        return {k: lofi_merge(stacked[k], plan[k]) for k in stacked}
+    return [lofi_merge(x, p) for x, p in zip(stacked, plan)]
+
+
 # --------------------------------------------------------- zero application
 def _is_zero(spec) -> bool:
     return isinstance(spec, SyncSpec) and spec.mode in ("zero",

@@ -2,18 +2,30 @@
 
 Trees are flattened to path-keyed arrays; structure is rebuilt on load from
 the same tree-def derived paths, so any pytree of jnp/np arrays round-trips.
+``load_checkpoint(path, template=...)`` validates the loaded tree against a
+caller-provided template (same paths, shapes, dtypes) and fails with a
+per-path mismatch report instead of silently rebuilding whatever treedef
+the file happens to contain.
 
 Distributed notes: the shard_map train step keeps params and optimizer
 state replicated (docs/distributed.md), so a checkpoint taken from any
 process is the global state — ``np.asarray`` on a replicated array is a
-local, collective-free read. Restoring into a sharded run is the caller's
-job: ``jax.device_put`` the loaded tree against ``sharding.policy``
-PartitionSpecs (the dry-run's ``_opt_state_shardings`` shows the layout).
+local, collective-free read. ZeRO-1/ZeRO-3 runs hold moments (and, for
+zero3, params) in a plan-dependent shard layout; the elastic loop's
+step-level checkpoints (``save_train_state``) always store *canonical*
+element order (``sharding.sync.zero_reshard`` before save), so a
+checkpoint restores onto any mesh size / sync mode — which is exactly what
+device-dropout recovery needs (docs/robustness.md).
+
+``save_train_state`` / ``load_train_state`` extend the bare tree
+round-trip with everything a bit-exact resume needs: step counter, the
+active ``Schedule`` and ``DeviceAssignment``, the RNG key, and arbitrary
+scalar loop state (speed EMAs, fault counters).
 """
 from __future__ import annotations
 
 import os
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import numpy as np
 
@@ -21,12 +33,23 @@ import jax
 import jax.numpy as jnp
 
 
+# empty containers have no leaves, so they would vanish from a path-keyed
+# flat dict; a zero-size marker entry keeps them round-trippable (a config
+# with no remainder blocks has params["rest"] == [])
+_EMPTY_LIST = "__empty_list__"
+_EMPTY_DICT = "__empty_dict__"
+
+
 def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
     out = {}
     if isinstance(tree, dict):
+        if not tree:
+            out[f"{prefix}{_EMPTY_DICT}"] = np.zeros(0)
         for k in sorted(tree):
             out.update(_flatten(tree[k], f"{prefix}{k}/"))
     elif isinstance(tree, (list, tuple)):
+        if not tree:
+            out[f"{prefix}{_EMPTY_LIST}"] = np.zeros(0)
         for i, v in enumerate(tree):
             out.update(_flatten(v, f"{prefix}#{i}/"))
     else:
@@ -46,6 +69,10 @@ def _unflatten(flat: Dict[str, np.ndarray]):
     def rebuild(node):
         if not isinstance(node, dict):
             return jnp.asarray(node)
+        if _EMPTY_LIST in node:
+            return []
+        if _EMPTY_DICT in node:
+            return {}
         if node and all(k.startswith("#") for k in node):
             items = sorted(node.items(), key=lambda kv: int(kv[0][1:]))
             return [rebuild(v) for _, v in items]
@@ -54,12 +81,149 @@ def _unflatten(flat: Dict[str, np.ndarray]):
     return rebuild(root)
 
 
+def _spec_flatten(tree, prefix="") -> Dict[str, tuple]:
+    """Like ``_flatten`` but records (shape, dtype) instead of values, so
+    templates can be concrete arrays OR ``jax.ShapeDtypeStruct`` trees."""
+    out = {}
+    if isinstance(tree, dict):
+        if not tree:
+            out[f"{prefix}{_EMPTY_DICT}"] = ((0,), np.dtype(np.float64))
+        for k in sorted(tree):
+            out.update(_spec_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        if not tree:
+            out[f"{prefix}{_EMPTY_LIST}"] = ((0,), np.dtype(np.float64))
+        for i, v in enumerate(tree):
+            out.update(_spec_flatten(v, f"{prefix}#{i}/"))
+    else:
+        out[prefix[:-1]] = (tuple(tree.shape), np.dtype(tree.dtype))
+    return out
+
+
+def validate_tree(flat: Dict[str, np.ndarray], template,
+                  what: str = "checkpoint") -> None:
+    """Raise ValueError with an actionable per-path report when the
+    flattened tree does not match the template's treedef/shapes/dtypes."""
+    want = _spec_flatten(template)
+    have = {k: (tuple(v.shape), np.dtype(v.dtype)) for k, v in flat.items()}
+    problems = []
+    for path in sorted(set(want) - set(have)):
+        problems.append(f"  missing  {path} "
+                        f"(template wants {want[path][0]} {want[path][1]})")
+    for path in sorted(set(have) - set(want)):
+        problems.append(f"  unexpected  {path} "
+                        f"(file has {have[path][0]} {have[path][1]})")
+    for path in sorted(set(want) & set(have)):
+        if want[path][0] != have[path][0]:
+            problems.append(
+                f"  shape mismatch  {path}: file {have[path][0]} "
+                f"vs template {want[path][0]}")
+        elif want[path][1] != have[path][1]:
+            problems.append(
+                f"  dtype mismatch  {path}: file {have[path][1]} "
+                f"vs template {want[path][1]}")
+    if problems:
+        shown = problems[:12]
+        if len(problems) > len(shown):
+            shown.append(f"  ... and {len(problems) - len(shown)} more")
+        raise ValueError(
+            f"{what} does not match the provided template "
+            f"({len(problems)} problem(s)):\n" + "\n".join(shown) +
+            "\nLikely causes: a config change since the checkpoint was "
+            "saved, or loading a different run's file.")
+
+
 def save_checkpoint(path: str, state) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     np.savez(path, **_flatten(state))
 
 
-def load_checkpoint(path: str):
+def load_checkpoint(path: str, template=None):
+    """Load a checkpoint tree; with ``template`` (a pytree of arrays or
+    ShapeDtypeStructs shaped like the expected result) the file's
+    paths/shapes/dtypes are validated first and a mismatch raises
+    ValueError with the offending paths — instead of silently rebuilding
+    whatever treedef the file contains."""
     with np.load(path if path.endswith(".npz") else path + ".npz") as z:
         flat = {k: z[k] for k in z.files}
+    if template is not None:
+        validate_tree(flat, template)
     return _unflatten(flat)
+
+
+# ------------------------------------------------- elastic train state
+def pack_schedule(sched) -> Dict[str, np.ndarray]:
+    """Schedule -> array dict (op table + dims) for npz storage."""
+    return {"table": np.asarray(sched.table, np.int8),
+            "n_layers": np.int64(sched.n_layers),
+            "n_groups": np.int64(sched.n_groups)}
+
+
+def unpack_schedule(d):
+    from repro.core.schedule import Schedule
+    return Schedule(np.asarray(d["table"], np.int8),
+                    int(d["n_layers"]), int(d["n_groups"]))
+
+
+def pack_assignment(assignment) -> Dict[str, np.ndarray]:
+    """DeviceAssignment -> array dict; capacities round-trip when set."""
+    out = {"device_of": np.asarray(assignment.device_of, np.int64),
+           "costs": np.asarray(assignment.costs, np.float64),
+           "n_devices": np.int64(assignment.n_devices)}
+    if assignment.capacities is not None:
+        out["capacities"] = np.asarray(assignment.capacities, np.float64)
+    return out
+
+
+def unpack_assignment(d):
+    from repro.core.assignment import DeviceAssignment
+    caps = d.get("capacities")
+    return DeviceAssignment(
+        np.asarray(d["device_of"], np.int64),
+        np.asarray(d["costs"], np.float64), int(d["n_devices"]),
+        np.asarray(caps, np.float64) if caps is not None else None)
+
+
+def save_train_state(path: str, *, step: int, params, opt_state,
+                     sched=None, assignment=None, rng=None,
+                     extra: Optional[dict] = None) -> None:
+    """Step-level checkpoint for the elastic loop: params + optimizer
+    state (caller must pass them in CANONICAL element order — reshard
+    zero/zero3 layouts first), step counter, the active schedule and
+    device assignment, the RNG key, and any extra scalar/array loop state
+    (a dict of numpy-able values). Everything a resume needs to be
+    bit-exact, on the original mesh or a shrunk one."""
+    state = {"step": np.int64(step), "params": params,
+             "opt_state": opt_state}
+    if sched is not None:
+        state["schedule"] = pack_schedule(sched)
+    if assignment is not None:
+        state["assignment"] = pack_assignment(assignment)
+    if rng is not None:
+        state["rng"] = np.asarray(rng)
+    if extra:
+        state["extra"] = {k: np.asarray(v) for k, v in extra.items()}
+    save_checkpoint(path, state)
+
+
+def load_train_state(path: str, params_template=None) -> dict:
+    """Inverse of ``save_train_state``. Returns a dict with ``step``
+    (int), ``params``, ``opt_state``, and — when saved — ``schedule``
+    (a ``Schedule``), ``assignment`` (a ``DeviceAssignment``), ``rng``
+    and ``extra``. ``params_template`` validates the params subtree
+    (see ``load_checkpoint``)."""
+    state = load_checkpoint(path)
+    if params_template is not None:
+        validate_tree(_flatten(state["params"]), params_template,
+                      what="checkpointed params")
+    out = {"step": int(state["step"]), "params": state["params"],
+           "opt_state": state["opt_state"]}
+    if "schedule" in state:
+        out["schedule"] = unpack_schedule(state["schedule"])
+    if "assignment" in state:
+        out["assignment"] = unpack_assignment(state["assignment"])
+    if "rng" in state:
+        out["rng"] = np.asarray(state["rng"])
+    if "extra" in state:
+        out["extra"] = {k: np.asarray(v) for k, v in state["extra"].items()}
+    return out

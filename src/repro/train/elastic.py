@@ -1,0 +1,472 @@
+"""Elastic fault-tolerant D2FT fine-tuning (docs/robustness.md).
+
+``finetune_elastic`` wraps the distributed D2FT machinery of
+``train/loop.py`` with the four responses a commodity fleet needs, driven
+by a deterministic ``launch.faults.FaultPlan``:
+
+* **straggler-aware replanning** — the loop keeps an EMA of measured
+  per-device step time per unit of assigned schedule cost; when the
+  spread exceeds ``straggler_tol`` the per-refresh knapsack runs with
+  ``core.assignment.speed_capacities`` budgets, shifting p_f-heavy
+  micro-batches off slow devices. Every refresh logs a rebalance report
+  extended with the predicted makespan with and without mitigation.
+* **device-dropout recovery** — a dropout shrinks the fleet to the
+  largest survivor count that still divides the micro-batch count
+  (equal shard_map shards), restores the last step-level checkpoint
+  (always saved in canonical element order), re-runs the assigner over
+  the survivors and re-lays ZeRO-1/ZeRO-3 shards out for the new mesh
+  via ``sharding.sync.zero_reshard``. Replay from the checkpoint is
+  bit-exact: a recovered run equals a fresh ``resume_from`` run on the
+  shrunk mesh.
+* **non-finite-grad guard** — every step runs with the pre-sync
+  per-subnet anomaly guard armed (``make_distributed_train_step``
+  ``guard=True``): a NaN/inf burst (or a grad-norm spike past
+  ``guard_factor`` x the norm EMA) on one replica zeroes that replica's
+  contribution before the pmean and skips the global update.
+* **degraded-sync fallback** — each injected dropped sync round discards
+  that step's update; once ``sync_fault_threshold`` rounds have been
+  lost the loop gives up on collectives entirely and switches to the
+  lo-fi ``sync_mode="local"``: per-replica stacked state, zero gradient
+  sync, and a masked weight merge (``sharding.sync.lofi_merge``) every
+  ``merge_every`` steps under the union of backward-live masks since the
+  replicas were last in sync.
+
+Everything the loop decides is recorded in ``log.extras["elastic"]``
+(events, recoveries, guard skips, merges, final mode) and per-refresh in
+``log.extras["refreshes"]`` — the fault-matrix tests and
+``BENCH_elastic.json`` read those records.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from dataclasses import dataclass
+from typing import Iterable, Optional
+
+import numpy as np
+
+import jax
+
+from repro.configs.base import D2FTConfig, ModelConfig
+from repro.core.assignment import (device_sample_order,
+                                   distributed_live_bounds,
+                                   microbatch_costs, plan_device_assignment,
+                                   speed_capacities, weighted_makespan)
+from repro.core.schedule import P_F, P_S, Schedule, gates_from_schedule
+from repro.data.synthetic import microbatch_assignment
+from repro.launch.faults import NO_FAULTS, FaultPlan
+from repro.models.transformer import lm_loss
+from repro.optim.optimizers import Optimizer
+from repro.sharding.sync import (backward_live_groups, grad_sync_plan,
+                                 lofi_merge, stack_replicas,
+                                 sync_byte_report, zero_reshard)
+from repro.train.checkpoints import load_train_state, save_train_state
+from repro.train.loop import (TrainLog, _reshard_opt_state,
+                              make_distributed_train_step, plan_from_scores)
+
+
+@dataclass
+class ElasticConfig:
+    """Policy knobs of the elastic loop (see module docstring)."""
+    refresh_every: Optional[int] = None   # re-score the schedule every k
+    ckpt_every: int = 1                   # step-level checkpoint cadence
+    ckpt_dir: Optional[str] = None        # default: a fresh temp dir
+    ema_alpha: float = 0.5                # step-time / grad-norm EMA weight
+    capacity_slack: float = 1.1           # speed_capacities feasibility slack
+    straggler_tol: float = 0.15           # engage capacities past this spread
+    guard_factor: Optional[float] = 10.0  # norm-anomaly thresh = f * EMA
+    sync_fault_threshold: int = 2         # dropped syncs before lo-fi
+    merge_every: int = 4                  # lo-fi merge cadence (steps)
+
+
+def feasible_survivor_count(n_devices: int, n_microbatches: int) -> int:
+    """Largest fleet size < n_devices that still divides the micro-batch
+    count — the shard_map step needs equal shards, so after a 1-device
+    dropout the mesh shrinks to the nearest feasible size (8 -> 4 for 8
+    micro-batches) rather than an un-shardable 7."""
+    for n in range(n_devices - 1, 0, -1):
+        if n_microbatches % n == 0:
+            return n
+    return 1
+
+
+def _mask_schedule(mask: np.ndarray) -> Schedule:
+    """[L, G] bool liveness -> a one-micro-batch Schedule whose
+    backward-live set is exactly the mask (feeds ``grad_sync_plan`` to
+    build the lo-fi merge plan)."""
+    table = np.where(np.asarray(mask, bool).reshape(-1, 1), P_F,
+                     P_S).astype(np.int8)
+    return Schedule(table, mask.shape[0], mask.shape[1])
+
+
+def _shapes_of(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def finetune_elastic(params, cfg: ModelConfig, d2: D2FTConfig,
+                     opt: Optimizer, batches: Iterable, *, steps: int,
+                     mesh, sync_mode: str = "masked",
+                     faults: Optional[FaultPlan] = None,
+                     elastic: Optional[ElasticConfig] = None,
+                     use_kernel: bool = False, clip: float = 1.0,
+                     rng=None, resume_from: Optional[str] = None,
+                     log: Optional[TrainLog] = None) -> tuple:
+    """Elastic distributed D2FT fine-tuning (see module docstring).
+
+    batches must be a deterministic, restartable-by-index stream (they
+    are buffered internally so a recovery can replay from the checkpoint
+    step). ``resume_from`` restores a ``save_train_state`` checkpoint —
+    on the original mesh size or a shrunk one (the assigner and the ZeRO
+    layouts are rebuilt for whatever ``mesh`` is passed). Returns
+    (params, opt_state, log) in canonical order/layout; in local mode the
+    replicas are merged one last time before returning."""
+    from repro.data.synthetic import split_microbatches
+    from repro.launch.mesh import make_data_mesh
+
+    fp = faults or NO_FAULTS
+    el = elastic or ElasticConfig()
+    log = log or TrainLog()
+    assert sync_mode in ("masked", "zero", "zero3", "local"), sync_mode
+    ckpt_dir = el.ckpt_dir or tempfile.mkdtemp(prefix="elastic_ckpt_")
+
+    ndev = mesh.shape["data"]
+    mode = sync_mode
+    opt_state = opt.init(params)
+    if mode == "local":
+        # lo-fi from step 0: state lives per-replica stacked from the start
+        params = stack_replicas(params, ndev)
+        opt_state = stack_replicas(opt_state, ndev)
+    speeds = np.ones(ndev)                # EMA of per-unit step time
+    ema_gnorm: Optional[float] = None
+    sync_faults = 0
+    guard_skips = 0
+    merges = 0
+    next_refresh = el.refresh_every or 0
+    sched = assignment = sync_plan = step_fn = None
+    ever_live = None                      # zero-mode gather staleness mask
+    live_since_merge = None               # local-mode divergence mask
+    steps_since_merge = 0
+    dropped = False
+    events: list = []
+    elastic_log = {"events": events, "ckpts": []}
+    log.extras["elastic"] = elastic_log
+
+    batch_buf: list = []
+    batch_iter = iter(batches)
+
+    def get_batch(idx: int):
+        while len(batch_buf) <= idx:
+            batch_buf.append(next(batch_iter))
+        return batch_buf[idx]
+
+    def canonical_state():
+        """(params, opt_state) in canonical order whatever the mode."""
+        if mode == "zero3":
+            return (zero_reshard(params, sync_plan, None),
+                    _reshard_opt_state(opt_state, sync_plan, None))
+        if mode == "zero":
+            return params, _reshard_opt_state(opt_state, sync_plan, None)
+        return params, opt_state          # masked replicated / local stack
+
+    def save_ckpt(step: int) -> str:
+        p, s = canonical_state()
+        extra = {
+            "speeds": speeds,
+            "ema_gnorm": np.nan if ema_gnorm is None else ema_gnorm,
+            "sync_faults": sync_faults, "guard_skips": guard_skips,
+            "merges": merges, "next_refresh": next_refresh,
+            "local": 1 if mode == "local" else 0, "n_devices": ndev,
+        }
+        if ever_live is not None:
+            extra["ever_live"] = ever_live
+        if mode == "local" and live_since_merge is not None:
+            extra["live_since_merge"] = live_since_merge
+        path = os.path.join(ckpt_dir, f"ckpt_{step}.npz")
+        save_train_state(path, step=step, params=p, opt_state=s,
+                         sched=sched, assignment=assignment, rng=rng,
+                         extra=extra)
+        elastic_log["ckpts"].append({"step": step, "path": path})
+        return path
+
+    def restore(path: str):
+        """Load a checkpoint into the loop state for the CURRENT ndev
+        (assignment/plan/layout are rebuilt, the schedule is kept)."""
+        nonlocal params, opt_state, sched, sync_plan, step_fn, speeds, \
+            ema_gnorm, sync_faults, guard_skips, merges, next_refresh, \
+            mode, ever_live, live_since_merge, steps_since_merge, assignment
+        ck = load_train_state(path, params_template=None)
+        params, opt_state = ck["params"], ck["opt_state"]
+        sched = ck.get("schedule")
+        extra = ck.get("extra", {})
+        was_local = bool(int(extra.get("local", 0)))
+        ck_ndev = int(extra.get("n_devices", ndev))
+        spd = np.asarray(extra.get("speeds", np.ones(ndev)), np.float64)
+        speeds = spd if len(spd) == ndev else np.ones(ndev)
+        eg = float(extra.get("ema_gnorm", np.nan))
+        ema_gnorm = None if np.isnan(eg) else eg
+        sync_faults = int(extra.get("sync_faults", 0))
+        guard_skips = int(extra.get("guard_skips", 0))
+        merges = int(extra.get("merges", 0))
+        next_refresh = int(extra.get("next_refresh", next_refresh))
+        ev = extra.get("ever_live")
+        ever_live = np.asarray(ev, bool) if ev is not None else None
+        mode = sync_mode if sync_mode != "local" else "masked"
+        if was_local and ck_ndev == ndev:
+            mode = "local"
+            lsm = extra.get("live_since_merge")
+            live_since_merge = np.asarray(lsm, bool) if lsm is not None \
+                else None
+        elif was_local:
+            # stacked state cannot survive a fleet resize: the checkpoint
+            # stores the replica stack, so merge it and fall back to the
+            # pre-degradation sync mode
+            plan = grad_sync_plan(
+                _shapes_of(jax.tree.map(lambda x: x[0], params)), cfg,
+                _mask_schedule(np.asarray(extra["live_since_merge"], bool))
+                if extra.get("live_since_merge") is not None
+                else _mask_schedule(np.ones((cfg.n_layers,
+                                             sched.n_groups), bool)))
+            params = lofi_merge(params, plan)
+            opt_state = jax.tree.map(lambda x: x[0], opt_state)
+            mode = sync_mode if sync_mode != "local" else "masked"
+        steps_since_merge = 0
+        sync_plan = None
+        assignment = None
+        step_fn = None
+        return int(ck["step"])
+
+    def rescore(batch):
+        """Fresh scoring pass -> new schedule (the expensive half of a
+        refresh; the assigner/plan rebuild happens in ``rebuild``)."""
+        score_params = params
+        if mode == "zero3" and sync_plan is not None:
+            score_params = zero_reshard(params, sync_plan, None)
+        elif mode == "local":
+            score_params = jax.tree.map(lambda x: x[0], params)
+        mbs = split_microbatches(batch, d2.n_microbatches)
+        return plan_from_scores(
+            cfg, d2, score_params, mbs,
+            lambda p, mb: lm_loss(p, cfg, mb.get("tokens"), mb["labels"],
+                                  features=mb.get("features"))[0])
+
+    def rebuild(step: int, run_mesh):
+        """Schedule + current speeds -> assignment (capacity-mitigated
+        when a straggler shows), sync plan, refresh record. Reshards
+        zero/zero3 state between plan layouts."""
+        nonlocal assignment, sync_plan, params, opt_state, ever_live, \
+            live_since_merge
+        costs = microbatch_costs(sched)
+        caps = None
+        if speeds.max() / speeds.min() > 1.0 + el.straggler_tol:
+            caps = speed_capacities(costs, speeds, el.capacity_slack)
+        old_plan = sync_plan
+        assignment, report = plan_device_assignment(sched, ndev, caps)
+        mitigation = {
+            "unit_times": [round(float(u), 4) for u in speeds],
+            "capacities": [round(float(c), 4) for c in caps]
+            if caps is not None else None,
+            "makespan": round(weighted_makespan(assignment, speeds), 6),
+        }
+        if caps is not None:
+            base, _ = plan_device_assignment(sched, ndev, None)
+            unmit = weighted_makespan(base, speeds)
+            mitigation["unmitigated_makespan"] = round(unmit, 6)
+            mitigation["mitigation_ratio"] = round(
+                mitigation["makespan"] / unmit, 6) if unmit > 0 else 1.0
+        if mode == "zero":
+            prior = ever_live
+            if ever_live is None:
+                ever_live = np.zeros((cfg.n_layers, sched.n_groups), bool)
+            sync_plan = grad_sync_plan(
+                _template(), cfg, sched, mode="zero", n_shards=ndev,
+                ever_live=prior, elide_gather=opt.elidable)
+            ever_live = ever_live | backward_live_groups(sched)
+            opt_state = _reshard_opt_state(opt_state, old_plan, sync_plan)
+        elif mode == "zero3":
+            sync_plan = grad_sync_plan(_template(), cfg, sched,
+                                       mode="zero3", n_shards=ndev)
+            params = zero_reshard(params, old_plan, sync_plan)
+            opt_state = _reshard_opt_state(opt_state, old_plan, sync_plan)
+        elif mode == "masked":
+            sync_plan = grad_sync_plan(_template(), cfg, sched)
+        else:                                       # local: merge mask only
+            sync_plan = None
+            live = backward_live_groups(sched)
+            live_since_merge = live if live_since_merge is None \
+                else live_since_merge | live
+        record = {"step": step, "rebalance": report, "elastic": mitigation,
+                  "n_devices": ndev, "sync_mode": mode}
+        if sync_plan is not None:
+            record["sync"] = sync_byte_report(sync_plan, _template(),
+                                              n_shards=ndev)
+            log.extras["sync"] = record["sync"]
+        log.extras["rebalance"] = report
+        log.extras.setdefault("refreshes", []).append(record)
+        return record
+
+    def _template():
+        """Unstacked canonical-shaped params view for plan building
+        (shapes are layout-invariant, so the current tree works)."""
+        if mode == "local":
+            return _shapes_of(jax.tree.map(lambda x: x[0], params))
+        return _shapes_of(params)
+
+    def switch_to_local(step: int):
+        nonlocal mode, params, opt_state, sync_plan, step_fn, \
+            live_since_merge, steps_since_merge
+        p, s = canonical_state()
+        mode = "local"
+        sync_plan = None
+        params = stack_replicas(p, ndev)
+        opt_state = stack_replicas(s, ndev)
+        live_since_merge = backward_live_groups(sched) \
+            if sched is not None else None
+        steps_since_merge = 0
+        step_fn = None
+        events.append({"type": "lofi_fallback", "step": step,
+                       "sync_faults": sync_faults,
+                       "merge_every": el.merge_every})
+
+    def do_merge(step: int):
+        nonlocal params, live_since_merge, steps_since_merge, merges
+        mask = live_since_merge if live_since_merge is not None \
+            else np.ones((cfg.n_layers, sched.n_groups), bool)
+        plan = grad_sync_plan(_template(), cfg, _mask_schedule(mask))
+        rep = sync_byte_report(plan, _template())
+        merged = lofi_merge(params, plan)
+        params = stack_replicas(merged, ndev)
+        merges += 1
+        steps_since_merge = 0
+        live_since_merge = backward_live_groups(sched)
+        events.append({"type": "merge", "step": step,
+                       "live_fraction": round(rep["fraction"], 6),
+                       "merged_bytes": rep["synced_bytes"]})
+
+    run_mesh = mesh
+    i = 0
+    if resume_from is not None:
+        i = restore(resume_from)
+        events.append({"type": "resume", "step": i, "path": resume_from})
+    last_ckpt = save_ckpt(i)
+
+    while i < steps:
+        # -- 1. simulated device dropout: shrink + restore + replay ----
+        dev = fp.dropout_at(i) if not dropped else None
+        if dev is not None:
+            dropped = True
+            new_ndev = feasible_survivor_count(ndev, d2.n_microbatches)
+            ck_path = last_ckpt
+            old_i, ndev = i, new_ndev
+            run_mesh = make_data_mesh(ndev)
+            i = restore(ck_path)
+            events.append({
+                "type": "dropout_recovery", "step": old_i, "device": dev,
+                "ckpt_step": i, "recovery_steps": old_i - i,
+                "n_devices": ndev, "ckpt": ck_path})
+            continue
+
+        # -- 2. plan: fresh scores on refresh, rebuild after recovery --
+        if sched is None or (el.refresh_every and i >= next_refresh
+                             and i > 0):
+            sched = rescore(get_batch(i))
+            if el.refresh_every:
+                next_refresh = (i // el.refresh_every + 1) * el.refresh_every
+            rebuild(i, run_mesh)
+            step_fn = None
+        elif step_fn is None and (assignment is None or sync_plan is None
+                                  or mode == "local"):
+            rebuild(i, run_mesh)
+
+        # -- 3. dropped gradient-sync round: lose the step, count it ---
+        if mode != "local" and fp.sync_dropped(i):
+            sync_faults += 1
+            events.append({"type": "sync_drop", "step": i,
+                           "count": sync_faults})
+            if el.sync_fault_threshold and \
+                    sync_faults >= el.sync_fault_threshold:
+                switch_to_local(i)
+            if el.ckpt_every and (i + 1) % el.ckpt_every == 0:
+                last_ckpt = save_ckpt(i + 1)
+            i += 1
+            continue
+
+        # -- 4. run the guarded step --------------------------------
+        batch = get_batch(i)
+        B = batch["labels"].shape[0]
+        mb_of = microbatch_assignment(B, d2.n_microbatches)
+        perm = device_sample_order(assignment, mb_of)
+        pbatch = jax.tree.map(lambda a: a[perm], batch)
+        gates = gates_from_schedule(sched, mb_of[perm])
+        if step_fn is None:
+            bounds = distributed_live_bounds(sched, mb_of, assignment) \
+                if use_kernel else None
+            step_fn = make_distributed_train_step(
+                cfg, opt, run_mesh, sync_plan, clip=clip,
+                use_kernel=use_kernel, live_bounds=bounds,
+                sync_mode=mode, params=params if mode != "local" else None,
+                guard=True, n_replicas=ndev)
+        fault_vec = fp.grad_fault_vector(i, ndev)
+        thresh = np.float32(np.inf)
+        if el.guard_factor is not None and ema_gnorm is not None:
+            thresh = np.float32(el.guard_factor * ema_gnorm)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, pbatch,
+                                             gates, fault_vec, thresh)
+        jax.block_until_ready(metrics["loss"])
+        wall = time.perf_counter() - t0
+        log.step_times.append(wall)
+        log.losses.append(float(metrics["loss"]))
+        log.metrics.append({k: float(v) for k, v in metrics.items()})
+
+        skipped = float(metrics.get("skipped", 0.0)) > 0
+        if skipped:
+            guard_skips += 1
+            events.append({
+                "type": "guard_skip", "step": i,
+                "bad_devices": float(metrics.get("bad_devices", 0.0)),
+                "bad_blocks": float(metrics.get("bad_blocks", 0.0))})
+        elif np.isfinite(float(metrics["grad_norm"])):
+            g = float(metrics["grad_norm"])
+            ema_gnorm = g if ema_gnorm is None else \
+                (1 - el.ema_alpha) * ema_gnorm + el.ema_alpha * g
+
+        # -- 5. synthesized per-device timing -> speed EMA -----------
+        # (a per-device wall clock does not exist in one SPMD program;
+        # the fault plan's unit times ARE the measurement — see
+        # launch/faults.py. measured_time_d = load_d * unit_time_d, so
+        # time/load recovers unit_time exactly.)
+        u_obs = fp.unit_times(i, ndev)
+        speeds = (1 - el.ema_alpha) * speeds + el.ema_alpha * u_obs
+
+        # -- 6. lo-fi merge cadence ----------------------------------
+        if mode == "local":
+            steps_since_merge += 1
+            if steps_since_merge >= el.merge_every \
+                    and not fp.sync_dropped(i):
+                do_merge(i)
+
+        if el.ckpt_every and (i + 1) % el.ckpt_every == 0:
+            last_ckpt = save_ckpt(i + 1)
+        i += 1
+
+    # ---- hand back canonical state ---------------------------------
+    if mode == "local":
+        if steps_since_merge > 0:
+            do_merge(steps - 1)
+        params = jax.tree.map(lambda x: x[0], params)
+        # lo-fi keeps optimizer moments per-replica; replica 0's state is
+        # returned as the representative (documented in docs/robustness.md)
+        opt_state = jax.tree.map(lambda x: x[0], opt_state)
+    elif mode in ("zero", "zero3") and sync_plan is not None:
+        opt_state = _reshard_opt_state(opt_state, sync_plan, None)
+        if mode == "zero3":
+            params = zero_reshard(params, sync_plan, None)
+    elastic_log.update({
+        "final_mode": mode, "n_devices": ndev,
+        "guard_skips": guard_skips, "sync_faults": sync_faults,
+        "merges": merges, "last_ckpt": last_ckpt,
+        "unit_times": [round(float(u), 4) for u in speeds],
+    })
+    return params, opt_state, log

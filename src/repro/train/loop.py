@@ -170,11 +170,48 @@ def _zero_state_specs(opt_state_shapes, plan, axis_name: str):
     }
 
 
+def _grad_anomaly(grads, thresh):
+    """Per-subnet-block gradient anomaly detection (the pre-sync guard).
+
+    Computes one squared grad norm per parameter block — each cycle of
+    every scan-stacked ``cycles`` entry, each ``rest`` block, and each
+    loss-path subtree — and flags blocks that are non-finite or whose
+    norm exceeds ``thresh`` (pass +inf to disable the norm test).
+    Returns (bad_any, n_bad_blocks): a scalar bool and a float count."""
+    def block_sq(tree, stacked):
+        leaves = jax.tree.leaves(tree)
+        if stacked:
+            tot = sum(jnp.sum(l.astype(jnp.float32) ** 2,
+                              axis=tuple(range(1, l.ndim)))
+                      for l in leaves)
+        else:
+            tot = sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves)
+        return jnp.atleast_1d(tot)
+
+    sqs = []
+    for key, sub in grads.items():
+        if key == "cycles":
+            sqs.extend(block_sq(blk, True) for blk in sub)
+        elif key == "rest":
+            sqs.extend(block_sq(blk, False) for blk in sub)
+        else:
+            sqs.append(block_sq(sub, False))
+    sq = jnp.concatenate(sqs)
+    bad = ~jnp.isfinite(sq) | (jnp.sqrt(sq) > thresh)
+    return bad.any(), bad.sum().astype(jnp.float32)
+
+
+def _tree_where(cond, a, b):
+    """Leafwise select: ``a`` where the scalar ``cond`` holds, else ``b``."""
+    return jax.tree.map(lambda x, y: jnp.where(cond, x, y), a, b)
+
+
 def make_distributed_train_step(cfg: ModelConfig, opt: Optimizer, mesh,
                                 sync_plan, *, clip: float = 1.0,
                                 use_kernel: bool = False, live_bounds=None,
                                 axis_name: str = "data",
-                                sync_mode: str = "masked", params=None):
+                                sync_mode: str = "masked", params=None,
+                                guard: bool = False, n_replicas=None):
     """shard_map data-parallel gated train step (paper's *distributed* D2FT).
 
     Each device runs the masked/kernel gated path on its shard of the batch
@@ -205,13 +242,37 @@ def make_distributed_train_step(cfg: ModelConfig, opt: Optimizer, mesh,
       the owning shards (ZeRO-2), and updates shard-resident. Requires a
       ``grad_sync_plan(mode="zero3", ...)`` plan and ``params``.
 
+    * ``"local"`` — the lo-fi communication-free mode: params and
+      optimizer state arrive *per-replica stacked* ([n_replicas, ...]
+      leaves, see ``sharding.sync.stack_replicas``) and every replica
+      updates its own copy from its own batch shard with ZERO gradient
+      sync (vmap over the replica axis — no collectives, no mesh
+      needed). The caller merges replicas every K steps with
+      ``sharding.sync.lofi_merge``. ``sync_plan``/``mesh`` are ignored;
+      ``n_replicas`` sets the stack size (defaults to the mesh's data
+      axis).
+
+    guard=True arms the pre-sync non-finite-grad guard: the step takes
+    two extra arguments ``(fault, thresh)`` — ``fault`` a [n_devices]
+    float32 multiplier applied to each device's local grads (the fault
+    injection seam, all-ones when healthy) and ``thresh`` a scalar
+    per-block grad-norm anomaly threshold (+inf disables). After the
+    backward, each device runs per-subnet-block anomaly detection
+    (``_grad_anomaly``) on its LOCAL grads; anomalous devices zero their
+    contribution *before* any collective (one bad replica cannot poison
+    the pmean), a one-scalar psum counts bad devices, and if any device
+    flagged, the whole update is skipped — params and optimizer state
+    pass through unchanged. Metrics gain ``skipped`` (0/1),
+    ``bad_devices`` and ``bad_blocks``. In local mode the guard is
+    per-replica: only the anomalous replica skips its own update.
+
     sync_plan: per-leaf SyncSpec tree from ``sharding.sync.grad_sync_plan``.
     live_bounds: static per-device (live_fwd, live_bwd) compaction bounds
     (``core.assignment.distributed_live_bounds``) — each device dispatches
     only its local shard's live slices through the gated kernels.
-    Returns jitted step(params, opt_state, batch, gates) with params
-    replicated, batch sharded on the leading axis and gates [L, B, G]
-    sharded on the sample axis.
+    Returns jitted step(params, opt_state, batch, gates[, fault, thresh])
+    with params replicated, batch sharded on the leading axis and gates
+    [L, B, G] sharded on the sample axis.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -228,19 +289,50 @@ def make_distributed_train_step(cfg: ModelConfig, opt: Optimizer, mesh,
                            use_kernel=use_kernel, live_bounds=live_bounds)
         return jax.value_and_grad(fn, has_aux=True)(params)
 
-    def local_step(params, opt_state, batch, gates):
+    def guard_local(grads, fault, thresh):
+        """Fault-inject, then neutralize anomalous local grads BEFORE any
+        collective; returns (clean grads, this-device bad flag, count)."""
+        f = fault[0]          # this device's scalar multiplier
+        grads = jax.tree.map(lambda g: g * f.astype(g.dtype), grads)
+        bad, n_bad_blocks = _grad_anomaly(grads, thresh)
+        grads = jax.tree.map(lambda g: jnp.where(bad, jnp.zeros_like(g), g),
+                             grads)
+        return grads, bad, n_bad_blocks
+
+    def finish_guarded(old_params, old_state, new_params, new_state,
+                       metrics, bad, n_bad_blocks):
+        """Skip-step: if ANY device flagged, every device keeps its old
+        params/state (the psum makes the decision replicated)."""
+        n_bad = jax.lax.psum(bad.astype(jnp.float32), axis_name)
+        skip = n_bad > 0
+        return (_tree_where(skip, old_params, new_params),
+                _tree_where(skip, old_state, new_state),
+                dict(metrics, skipped=skip.astype(jnp.float32),
+                     bad_devices=n_bad,
+                     bad_blocks=jax.lax.psum(n_bad_blocks, axis_name)))
+
+    def local_step(params, opt_state, batch, gates, fault=None, thresh=None):
         (loss, metrics), grads = loss_of(params, batch, gates)
+        if guard:
+            grads, bad, n_bad_blocks = guard_local(grads, fault, thresh)
         grads = apply_grad_sync(grads, sync_plan, axis_name)
         loss = jax.lax.pmean(loss, axis_name)
         metrics = {k: jax.lax.pmean(v, axis_name) for k, v in metrics.items()}
         # post-sync grads are the global mean on every device, so the norm,
         # clip and optimizer update stay replicated without more collectives
         grads, gnorm = clip_by_global_norm(grads, clip)
-        params, opt_state = opt.update(grads, opt_state, params)
-        return params, opt_state, dict(metrics, loss=loss, grad_norm=gnorm)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        if guard:
+            return finish_guarded(params, opt_state, new_params, new_state,
+                                  metrics, bad, n_bad_blocks)
+        return new_params, new_state, metrics
 
-    def local_step_zero(params, opt_state, batch, gates):
+    def local_step_zero(params, opt_state, batch, gates, fault=None,
+                        thresh=None):
         (loss, metrics), grads = loss_of(params, batch, gates)
+        if guard:
+            grads, bad, n_bad_blocks = guard_local(grads, fault, thresh)
         # mixed tree: reduced shards at zero leaves (live runs
         # reduce-scattered, dead runs locally sliced), masked pmean
         # elsewhere
@@ -258,17 +350,25 @@ def make_distributed_train_step(cfg: ModelConfig, opt: Optimizer, mesh,
         # through in_specs); the schedule-masked all-gather re-replicates
         # exactly the runs whose params can have changed
         pshard = zero_shard_params(params, sync_plan, axis_name)
-        new_shard, opt_state = opt.update(gsync, opt_state, pshard)
-        params = apply_zero_gather(new_shard, params, sync_plan, axis_name)
-        return params, opt_state, dict(metrics, loss=loss, grad_norm=gnorm)
+        new_shard, new_state = opt.update(gsync, opt_state, pshard)
+        new_params = apply_zero_gather(new_shard, params, sync_plan,
+                                       axis_name)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        if guard:
+            return finish_guarded(params, opt_state, new_params, new_state,
+                                  metrics, bad, n_bad_blocks)
+        return new_params, new_state, metrics
 
-    def local_step_zero3(params, opt_state, batch, gates):
+    def local_step_zero3(params, opt_state, batch, gates, fault=None,
+                         thresh=None):
         # params arrive as owned shards (the plan's layout); full views
         # exist only between here and the update — the ZeRO-3 residency
         # window. Runs the schedule proves forward-dead are never gathered
         # (zeros view, exact: their every consumer is gated off).
         full = zero3_materialize(params, sync_plan, axis_name)
         (loss, metrics), grads = loss_of(full, batch, gates)
+        if guard:
+            grads, bad, n_bad_blocks = guard_local(grads, fault, thresh)
         gsync = apply_zero_scatter(grads, sync_plan, axis_name)
         loss = jax.lax.pmean(loss, axis_name)
         metrics = {k: jax.lax.pmean(v, axis_name) for k, v in metrics.items()}
@@ -279,8 +379,59 @@ def make_distributed_train_step(cfg: ModelConfig, opt: Optimizer, mesh,
         # grads and params are both shard-resident at zero leaves: the
         # update never touches a full tensor and there is no post-update
         # gather — next step's materialization starts from the new shards.
-        params, opt_state = opt.update(gsync, opt_state, params)
-        return params, opt_state, dict(metrics, loss=loss, grad_norm=gnorm)
+        new_params, new_state = opt.update(gsync, opt_state, params)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        if guard:
+            return finish_guarded(params, opt_state, new_params, new_state,
+                                  metrics, bad, n_bad_blocks)
+        return new_params, new_state, metrics
+
+    if sync_mode == "local":
+        # lo-fi: per-replica stacked state, zero collectives — a vmap over
+        # the replica axis stands in for the mesh (each replica is a
+        # device that lost its links but kept training).
+        R = int(n_replicas) if n_replicas else mesh.shape[axis_name]
+
+        def one_replica(params, opt_state, batch, gates, fault=None,
+                        thresh=None):
+            (loss, metrics), grads = loss_of(params, batch, gates)
+            if guard:
+                grads = jax.tree.map(
+                    lambda g: g * fault.astype(g.dtype), grads)
+                bad, n_bad_blocks = _grad_anomaly(grads, thresh)
+                grads = jax.tree.map(
+                    lambda g: jnp.where(bad, jnp.zeros_like(g), g), grads)
+            grads, gnorm = clip_by_global_norm(grads, clip)
+            new_params, new_state = opt.update(grads, opt_state, params)
+            metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+            if guard:
+                # per-replica skip: only the anomalous replica holds back
+                new_params = _tree_where(bad, params, new_params)
+                new_state = _tree_where(bad, opt_state, new_state)
+                metrics = dict(metrics, skipped=bad.astype(jnp.float32),
+                               bad_blocks=n_bad_blocks)
+            return new_params, new_state, metrics
+
+        in_axes = (0, 0, 0, (1, 1)) + ((0, None) if guard else ())
+        vstep = jax.vmap(one_replica, in_axes=in_axes)
+
+        def step(params_stack, opt_stack, batch, gates, *rest):
+            batch = jax.tree.map(
+                lambda a: a.reshape((R, a.shape[0] // R) + a.shape[1:]),
+                batch)
+            gates = tuple(
+                g.reshape(g.shape[0], R, g.shape[1] // R, g.shape[2])
+                for g in gates)
+            new_p, new_s, metrics = vstep(params_stack, opt_stack, batch,
+                                          gates, *rest)
+            metrics = {
+                k: v.sum() if k in ("skipped", "bad_blocks") else v.mean()
+                for k, v in metrics.items()}
+            if guard:
+                metrics["bad_devices"] = metrics["skipped"]
+            return new_p, new_s, metrics
+
+        return jax.jit(step)
 
     # check_rep=False: skipped (dead-subnet) grad leaves are device-invariant
     # — identically zero everywhere — but shard_map's replication tracker
@@ -300,10 +451,13 @@ def make_distributed_train_step(cfg: ModelConfig, opt: Optimizer, mesh,
             body = local_step_zero3
     else:
         raise ValueError(f"unknown sync_mode {sync_mode!r}")
+    in_specs = (param_specs, state_specs, P(axis_name),
+                (P(None, axis_name), P(None, axis_name)))
+    if guard:
+        in_specs = in_specs + (P(axis_name), P())
     step = shard_map(
         body, mesh=mesh,
-        in_specs=(param_specs, state_specs, P(axis_name),
-                  (P(None, axis_name), P(None, axis_name))),
+        in_specs=in_specs,
         out_specs=(param_specs, state_specs, P()),
         check_rep=False)
     return jax.jit(step)

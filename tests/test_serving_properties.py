@@ -14,7 +14,12 @@ it via requirements.txt, see conftest.optional_hypothesis).
   never fails;
 * ``plan_waves`` partitions the request indices exactly once, never
   overflows the page budget or the slot count per wave, and is
-  deterministic.
+  deterministic;
+* the full ``PagedServingEngine`` under a randomized admission/evict
+  fault trace (requests cancelled mid-flight at arbitrary points) keeps
+  the page pool consistent at every step and reclaims an evicted
+  sequence's pages exactly — the serving-side analogue of the elastic
+  trainer's fault injection (docs/robustness.md).
 """
 import numpy as np
 import pytest
@@ -23,6 +28,11 @@ from conftest import optional_hypothesis
 
 given, settings, st = optional_hypothesis()
 
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import init_model
+from repro.serving.engine import PagedServingEngine, Request
 from repro.serving.packer import plan_waves, worst_case_pages
 from repro.serving.pages import PageManager, pages_needed
 
@@ -136,3 +146,70 @@ def test_table_array_null_padding():
     assert list(row[:n]) == pm.tables[7]
     assert not row[n:].any(), "padding must be the null page 0"
     assert 0 not in row[:n]
+
+
+# ===================================== engine under an admission/evict trace
+_ENG_CFG = ModelConfig(name="pe", arch_type="dense", n_layers=2,
+                       d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                       vocab_size=64)
+_ENG_PARAMS = init_model(jax.random.PRNGKey(0), _ENG_CFG)
+
+
+@st.composite
+def engine_fault_traces(draw):
+    """Interleaved submit / step / evict ops — an admission stream with
+    mid-flight cancellations at hypothesis-chosen points."""
+    return draw(st.lists(
+        st.one_of(
+            st.tuples(st.just("submit"), st.integers(1, 10),
+                      st.integers(1, 4)),          # prompt len, max_new
+            st.tuples(st.just("step")),
+            st.tuples(st.just("evict"), st.integers(0, 7)),  # victim rank
+        ), min_size=3, max_size=22))
+
+
+@settings(max_examples=12, deadline=None)
+@given(engine_fault_traces())
+def test_engine_eviction_trace_reclaims_pages(ops):
+    """The engine's page pool survives arbitrary mid-flight evictions:
+    after EVERY op the ``PageManager`` invariants hold (``check()``) and
+    the pool is conserved (owned + free == capacity); an eviction returns
+    exactly the pages the sequence owned, immediately reusable; draining
+    the engine restores the whole pool."""
+    eng = PagedServingEngine(_ENG_PARAMS, _ENG_CFG, page_size=4,
+                             n_pages=12, max_slots=3, max_seq_len=16)
+    cap = eng.pm.capacity
+    next_uid = 0
+    for op in ops:
+        if op[0] == "submit":
+            _, plen, max_new = op
+            prompt = (np.arange(plen) % _ENG_CFG.vocab_size).astype(
+                np.int32)
+            eng.submit(Request(uid=next_uid, prompt=prompt,
+                               max_new_tokens=max_new))
+            next_uid += 1
+        elif op[0] == "step":
+            eng.step()
+        else:
+            pending = sorted(
+                {s.req.uid for s in eng.live.values()}
+                | {r.uid for r in eng.waiting})
+            if pending:
+                uid = pending[op[1] % len(pending)]
+                owned = set(eng.pm.tables.get(uid, []))
+                free_before = eng.pm.n_free
+                freed = eng.evict(uid)
+                # exact reclamation: everything it owned, nothing else
+                assert set(freed) == owned
+                assert eng.pm.n_free == free_before + len(freed)
+                assert uid in eng.finished
+        eng.pm.check()
+        owned_total = sum(len(t) for t in eng.pm.tables.values())
+        assert owned_total + eng.pm.n_free == cap
+    # drain what is still in flight; the pool must come back whole
+    for uid in sorted({s.req.uid for s in eng.live.values()}
+                      | {r.uid for r in eng.waiting}):
+        eng.evict(uid)
+        eng.pm.check()
+    assert eng.pm.n_free == cap
+    assert eng.pm.n_reserved == 0

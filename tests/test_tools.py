@@ -1,0 +1,130 @@
+"""tools/ regression gates: check_bench key resolution + error reporting.
+
+The bench gate's failure mode that matters is the MISSING key: a renamed
+metric (or a typo'd baseline path) must produce a message that names the
+failing dotted-path component, the bench file, and what keys WERE
+available at that level — not a bare KeyError — or every rename turns
+into a dig through two JSON files.
+"""
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_check_bench():
+    spec = importlib.util.spec_from_file_location(
+        "check_bench", os.path.join(ROOT, "tools", "check_bench.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+cb = _load_check_bench()
+
+DOC = {"zero3": {"residency_fraction": 0.33, "peak_unit": "wq"},
+       "mixes": [{"executed_flop_fraction": 1.0},
+                 {"executed_flop_fraction": 0.54}],
+       "top": 3}
+
+
+def test_resolve_walks_dicts_and_lists():
+    assert cb.resolve(DOC, "zero3.residency_fraction") == 0.33
+    assert cb.resolve(DOC, "mixes.1.executed_flop_fraction") == 0.54
+    assert cb.resolve(DOC, "top") == 3
+
+
+def test_resolve_missing_key_names_component_and_available():
+    with pytest.raises(cb.ResolveError) as e:
+        cb.resolve(DOC, "zero3.residency_fractoin")
+    msg = e.value.args[0]
+    assert "'residency_fractoin'" in msg          # the failing component
+    assert "after zero3" in msg                   # where the walk stopped
+    assert "peak_unit" in msg and "residency_fraction" in msg  # candidates
+
+
+def test_resolve_bad_list_index_reports_length():
+    with pytest.raises(cb.ResolveError) as e:
+        cb.resolve(DOC, "mixes.7.executed_flop_fraction")
+    assert "list of length 2" in e.value.args[0]
+    with pytest.raises(cb.ResolveError) as e:
+        cb.resolve(DOC, "mixes.notanint")
+    assert "'notanint'" in e.value.args[0]
+
+
+def test_resolve_descend_into_leaf_fails():
+    with pytest.raises(cb.ResolveError) as e:
+        cb.resolve(DOC, "top.deeper")
+    msg = e.value.args[0]
+    assert "'deeper'" in msg and "after top" in msg
+    assert "leaf of type int" in msg
+
+
+def test_check_key_missing_message_carries_bench_file():
+    ok, msg = cb.check_key(DOC, "zero3.nope", {"max": 1.0},
+                           "BENCH_x.json")
+    assert not ok
+    assert "MISSING" in msg and "BENCH_x.json" in msg
+    assert "'nope'" in msg and "available keys" in msg
+
+
+def test_check_key_bounds_and_drift():
+    ok, _ = cb.check_key(DOC, "zero3.residency_fraction", {"max": 0.5})
+    assert ok
+    ok, msg = cb.check_key(DOC, "zero3.residency_fraction", {"max": 0.1})
+    assert not ok and "> max" in msg
+    ok, msg = cb.check_key(DOC, "zero3.residency_fraction",
+                           {"value": 0.5, "tol": 0.05})
+    assert not ok and "drifted" in msg
+    ok, msg = cb.check_key(DOC, "zero3.peak_unit", {"min": 0})
+    assert not ok and "not a number" in msg
+
+
+def test_check_bench_cli_missing_key_exit_and_message(tmp_path):
+    """End-to-end: a baseline pointing at a renamed metric fails with the
+    component + available-keys diagnosis on stdout and exit code 1."""
+    fresh = tmp_path / "BENCH_demo.json"
+    fresh.write_text(json.dumps({"metrics": {"new_name": 1.0}}))
+    base = tmp_path / "baselines.json"
+    base.write_text(json.dumps(
+        {"BENCH_demo.json": {"metrics.old_name": {"min": 0.5}}}))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "check_bench.py"),
+         "--baselines", str(base), "--dir", str(tmp_path)],
+        capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "MISSING" in proc.stdout
+    assert "'old_name'" in proc.stdout
+    assert "new_name" in proc.stdout            # the available key
+
+
+def test_check_bench_cli_passes_on_good_baseline(tmp_path):
+    fresh = tmp_path / "BENCH_demo.json"
+    fresh.write_text(json.dumps({"metrics": {"frac": 0.4}}))
+    base = tmp_path / "baselines.json"
+    base.write_text(json.dumps(
+        {"BENCH_demo.json":
+         {"metrics.frac": {"value": 0.4, "tol": 0.01, "max": 0.6}}}))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "check_bench.py"),
+         "--baselines", str(base), "--dir", str(tmp_path)],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "PASS" in proc.stdout
+
+
+def test_check_docs_requires_the_doc_set():
+    """docs/robustness.md (and the rest of the REQUIRED set) must exist —
+    the checker fails loudly when one is deleted or renamed."""
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", os.path.join(ROOT, "tools", "check_docs.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    assert "docs/robustness.md" in mod.REQUIRED
+    for r in mod.REQUIRED:
+        assert os.path.exists(os.path.join(ROOT, r)), r

@@ -47,27 +47,63 @@ DEFAULT_BASELINES = os.path.join(os.path.dirname(__file__), "..",
                                  "benchmarks", "bench_baselines.json")
 
 
+class ResolveError(KeyError):
+    """A dotted-path lookup failed; the message pinpoints WHICH component
+    failed and what was available at that level, so a renamed metric or a
+    stale baseline key is a one-glance diagnosis instead of a bare
+    'missing'."""
+
+
+def _available(node) -> str:
+    if isinstance(node, dict):
+        keys = sorted(node)
+        shown = ", ".join(keys[:10])
+        if len(keys) > 10:
+            shown += f", ... ({len(keys) - 10} more)"
+        return f"available keys: [{shown}]"
+    if isinstance(node, list):
+        return f"a list of length {len(node)} (use an integer index)"
+    return f"a leaf of type {type(node).__name__}"
+
+
 def resolve(doc, path: str):
-    """Walk a dotted path; integer components index lists."""
+    """Walk a dotted path; integer components index lists. Raises
+    ``ResolveError`` naming the failing component and the keys/length
+    available at that point."""
     node = doc
+    walked = []
     for part in path.split("."):
         if isinstance(node, list):
-            node = node[int(part)]
+            try:
+                node = node[int(part)]
+            except (ValueError, IndexError):
+                raise ResolveError(
+                    f"component {part!r} (after "
+                    f"{'.'.join(walked) or '<root>'}) does not index "
+                    f"{_available(node)}")
         elif isinstance(node, dict):
             if part not in node:
-                raise KeyError(path)
+                raise ResolveError(
+                    f"component {part!r} (after "
+                    f"{'.'.join(walked) or '<root>'}) not found; "
+                    f"{_available(node)}")
             node = node[part]
         else:
-            raise KeyError(path)
+            raise ResolveError(
+                f"component {part!r} (after "
+                f"{'.'.join(walked) or '<root>'}) cannot descend into "
+                f"{_available(node)}")
+        walked.append(part)
     return node
 
 
-def check_key(fresh, path: str, spec: dict):
+def check_key(fresh, path: str, spec: dict, bench_file: str = "?"):
     """Returns (ok, message) for one baseline entry."""
     try:
         got = resolve(fresh, path)
-    except (KeyError, IndexError, ValueError):
-        return False, f"{path}: MISSING from fresh bench output"
+    except ResolveError as e:
+        return False, (f"{path}: MISSING from fresh {bench_file}: "
+                       f"{e.args[0]}")
     if not isinstance(got, (int, float)) or isinstance(got, bool):
         return False, f"{path}: not a number ({got!r})"
     problems = []
@@ -120,11 +156,12 @@ def main() -> int:
                 try:
                     spec["value"] = resolve(fresh, key)
                     print(f"UPDATE {bench_file} {key} = {spec['value']:.6g}")
-                except (KeyError, IndexError, ValueError):
-                    print(f"FAIL {bench_file} {key}: missing, not updated")
+                except ResolveError as e:
+                    print(f"FAIL {bench_file} {key}: not updated — "
+                          f"{e.args[0]}")
                     failures += 1
                 continue
-            ok, msg = check_key(fresh, key, spec)
+            ok, msg = check_key(fresh, key, spec, bench_file)
             print(("PASS " if ok else "FAIL ") + f"{bench_file} {msg}")
             failures += 0 if ok else 1
 

@@ -11,8 +11,12 @@ Checked reference forms:
     `path::symbol` mention checks only the path part.
 
 Relative markdown links resolve against the file's directory; bare path
-mentions resolve against the repo root. Exits 1 listing every dangling
-reference. No dependencies — runs before ``pip install`` in CI.
+mentions resolve against the repo root. Additionally, the ``REQUIRED``
+doc set must exist — a doc a subsystem's module docstrings point at
+(docs/robustness.md, docs/distributed.md, ...) being deleted or renamed
+without updating this list is an error, not a silent shrink of the
+checked surface. Exits 1 listing every dangling reference. No
+dependencies — runs before ``pip install`` in CI.
 """
 from __future__ import annotations
 
@@ -30,6 +34,11 @@ PATH_PREFIXES = ("src/", "docs/", "tests/", "examples/", "benchmarks/",
 TOP_LEVEL = {"README.md", "ROADMAP.md", "PAPER.md", "PAPERS.md",
              "SNIPPETS.md", "CHANGES.md", "Makefile", "requirements.txt"}
 SKIP_CHARS = set("*<>{}$")
+
+# docs that module docstrings and the README point at by name; each must
+# exist (deleting/renaming one must update this list in the same PR)
+REQUIRED = ("docs/architecture.md", "docs/distributed.md",
+            "docs/kernels.md", "docs/robustness.md", "docs/serving.md")
 
 
 def refs_in(path: str):
@@ -50,6 +59,13 @@ def refs_in(path: str):
 
 
 def main() -> int:
+    missing = [r for r in REQUIRED
+               if not os.path.exists(os.path.join(ROOT, r))]
+    if missing:
+        print(f"{len(missing)} required doc(s) missing:")
+        for r in missing:
+            print(f"  {r}")
+        return 1
     files = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
     files.append(os.path.join(ROOT, "README.md"))
     dangling = []
