@@ -23,9 +23,13 @@ test-multidevice:
 test-faults:
 	$(PY) -m pytest -x -q -m faults
 
+# attention + SSD/RG-LRU/MoE gated block kernels: grad parity vs the
+# reference VJPs, compaction dispatch, config-zoo no-fallback coverage
+# and the cross-path parity matrix
 test-kernels:
 	$(PY) -m pytest -x -q tests/test_kernels.py tests/test_kernel_grads.py \
-		tests/test_compaction.py
+		tests/test_compaction.py tests/test_block_kernels.py \
+		tests/test_config_zoo.py tests/test_parity_matrix.py
 
 # the serving suite: paged-KV decode parity, the Pallas paged-decode
 # kernel, page-manager/packer properties and engine invariants

@@ -385,6 +385,164 @@ def bench_kernel_backward():
             "full_dispatched_bytes": {"fwd": full_fb, "bwd": full_bb},
             "dispatched_bytes_fraction": byte_frac,
         })
+    # ---- SSD / RG-LRU / MoE block-kernel mixes (contract parity with the
+    # attention rows: wall time vs the masked reference, executed-FLOP and
+    # dispatched-bytes fractions from each kernel's analytic account).
+    # Appended AFTER the attention mixes so baseline indices 0-2 are stable.
+    from repro.kernels.d2ft_moe import (gated_moe_dispatched_bytes,
+                                        gated_moe_flops)
+    from repro.kernels.d2ft_rglru import (gated_rglru_dispatched_bytes,
+                                          gated_rglru_flops)
+    from repro.kernels.d2ft_ssd import (gated_ssd_dispatched_bytes,
+                                        gated_ssd_flops)
+    from repro.kernels.ops import gated_moe_ffn, gated_rglru_scan, \
+        gated_ssd_scan
+    from repro.kernels.ref import (gated_moe_ffn_ref, gated_rglru_ref,
+                                   gated_ssd_ref)
+
+    def timed_on(fn, *args):
+        jax.block_until_ready(fn(*args))            # compile + warm
+        n = 3
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(fn(*args))
+        return (time.perf_counter() - t0) / n * 1e6
+
+    def mix_gates(shape, probs):
+        ops_ = rng.choice(3, size=shape, p=probs)
+        return (ops_, jnp.asarray((ops_ != 2).astype(np.float32)),
+                jnp.asarray((ops_ == 0).astype(np.float32)),
+                max(1, int((ops_ != 2).sum())), max(1, int((ops_ == 0).sum())))
+
+    block_mixes = [("pf3_po1_ps1", (0.6, 0.2, 0.2)),
+                   ("pf1_po2_ps2", (0.2, 0.4, 0.4))]
+
+    def record(kernel, name, probs, kern_us, ref_us, disp, e_flops, f_flops,
+               d_bytes, f_bytes):
+        flop_frac = e_flops / f_flops
+        byte_frac = sum(d_bytes) / sum(f_bytes)
+        emit(f"kernel_bwd_{kernel}_{name}", kern_us,
+             f"ref_us={ref_us:.1f};executed_mxu_gflop={e_flops / 1e9:.3f};"
+             f"full_mxu_gflop={f_flops / 1e9:.3f};"
+             f"executed_fraction={flop_frac:.3f};"
+             f"dispatched_bytes_fraction={byte_frac:.3f}")
+        records.append({
+            "mix": f"{kernel}_{name}", "kernel": kernel,
+            "p_fractions": {"p_f": probs[0], "p_o": probs[1],
+                            "p_s": probs[2]},
+            "wall_us_per_call": kern_us,
+            "ref_wall_us_per_call": ref_us,
+            "dispatched_slices": disp,
+            "executed_mxu_flops": e_flops,
+            "full_mxu_flops": f_flops,
+            "executed_flop_fraction": flop_frac,
+            "dispatched_bytes": {"fwd": d_bytes[0], "bwd": d_bytes[1]},
+            "full_dispatched_bytes": {"fwd": f_bytes[0], "bwd": f_bytes[1]},
+            "dispatched_bytes_fraction": byte_frac,
+        })
+
+    # SSD chunked scan: (sample, head) slices
+    Bs, Hs, Ss, Ps, Ns, Qs = 4, 8, 256, 16, 16, 64
+    kss = jax.random.split(jax.random.PRNGKey(1), 5)
+    xs = jax.random.normal(kss[0], (Bs, Ss, Hs, Ps))
+    das = -jax.nn.softplus(jax.random.normal(kss[1], (Bs, Ss, Hs)))
+    Bms = jax.random.normal(kss[2], (Bs, Ss, Ns)) * 0.5
+    Cms = jax.random.normal(kss[3], (Bs, Ss, Ns)) * 0.5
+    cts = jax.random.normal(kss[4], (Bs, Ss, Hs, Ps))
+    ones_s = np.ones((Bs, Hs))
+    sflops_full = sum(gated_ssd_flops(ones_s, ones_s, Ss, Ps, Ns, chunk=Qs))
+    sbytes_full = gated_ssd_dispatched_bytes(ones_s, ones_s, Ss, Ps, Ns,
+                                             chunk=Qs)
+    for name, probs in block_mixes:
+        ops_, g_f, g_b, live_f, live_b = mix_gates((Bs, Hs), probs)
+        kern = jax.jit(jax.value_and_grad(
+            lambda x, da, Bm, Cm: (gated_ssd_scan(
+                x, da, Bm, Cm, g_f, g_b, chunk=Qs, live_fwd=live_f,
+                live_bwd=live_b) * cts).sum(), argnums=(0, 1, 2, 3)))
+        refp = jax.jit(jax.value_and_grad(
+            lambda x, da, Bm, Cm: (gated_ssd_ref(
+                x, da, Bm, Cm, g_f, g_b, chunk=Qs) * cts).sum(),
+            argnums=(0, 1, 2, 3)))
+        e_flops = sum(gated_ssd_flops(np.asarray(g_f), np.asarray(g_b),
+                                      Ss, Ps, Ns, chunk=Qs))
+        d_bytes = gated_ssd_dispatched_bytes(
+            np.asarray(g_f), np.asarray(g_b), Ss, Ps, Ns, chunk=Qs,
+            live_fwd=live_f, live_bwd=live_b)
+        record("ssd", name, probs, timed_on(kern, xs, das, Bms, Cms),
+               timed_on(refp, xs, das, Bms, Cms),
+               {"fwd": live_f, "bwd": live_b, "total": Bs * Hs},
+               e_flops, sflops_full, d_bytes, sbytes_full)
+
+    # RG-LRU recurrence: (sample, channel-band) slices
+    Br, Sr, Wr, Gr, Qr = 4, 256, 256, 8, 64
+    Wgr = Wr // Gr
+    krs = jax.random.split(jax.random.PRNGKey(2), 3)
+    lar = -jax.nn.softplus(jax.random.normal(krs[0], (Br, Sr, Wr)))
+    br = jax.random.normal(krs[1], (Br, Sr, Wr))
+    ctr = jax.random.normal(krs[2], (Br, Sr, Wr))
+    ones_r = np.ones((Br, Gr))
+    rflops_full = sum(gated_rglru_flops(ones_r, ones_r, Sr, Wgr, chunk=Qr))
+    rbytes_full = gated_rglru_dispatched_bytes(ones_r, ones_r, Sr, Wgr,
+                                               chunk=Qr)
+    for name, probs in block_mixes:
+        ops_, g_f, g_b, live_f, live_b = mix_gates((Br, Gr), probs)
+        kern = jax.jit(jax.value_and_grad(
+            lambda la, b: (gated_rglru_scan(
+                la, b, g_f, g_b, chunk=Qr, live_fwd=live_f,
+                live_bwd=live_b) * ctr).sum(), argnums=(0, 1)))
+        refp = jax.jit(jax.value_and_grad(
+            lambda la, b: (gated_rglru_ref(la, b, g_f, g_b,
+                                           chunk=Qr) * ctr).sum(),
+            argnums=(0, 1)))
+        e_flops = sum(gated_rglru_flops(np.asarray(g_f), np.asarray(g_b),
+                                        Sr, Wgr, chunk=Qr))
+        d_bytes = gated_rglru_dispatched_bytes(
+            np.asarray(g_f), np.asarray(g_b), Sr, Wgr, chunk=Qr,
+            live_fwd=live_f, live_bwd=live_b)
+        record("rglru", name, probs, timed_on(kern, lar, br),
+               timed_on(refp, lar, br),
+               {"fwd": live_f, "bwd": live_b, "total": Br * Gr},
+               e_flops, rflops_full, d_bytes, rbytes_full)
+
+    # MoE expert FFN: (expert, capacity-block) tiles, live slots packed
+    # first per expert (mirrors the model's gate-aware dispatch) so the
+    # live_slots capacity truncation is real
+    Em, Cm_, Dm, Fm, bcm = 4, 256, 64, 128, 32
+    ncb = Cm_ // bcm
+    kms = jax.random.split(jax.random.PRNGKey(3), 5)
+    xbm = jax.random.normal(kms[0], (Em, Cm_, Dm))
+    wum = jax.random.normal(kms[1], (Em, Dm, Fm)) / np.sqrt(Dm)
+    wgm = jax.random.normal(kms[2], (Em, Dm, Fm)) / np.sqrt(Dm)
+    wdm = jax.random.normal(kms[3], (Em, Fm, Dm)) / np.sqrt(Fm)
+    ctm = jax.random.normal(kms[4], (Em, Cm_, Dm))
+    mflops_full = sum(gated_moe_flops(np.ones((Em, ncb)), np.ones((Em, ncb)),
+                                      bcm, Dm, Fm))
+    mbytes_full = gated_moe_dispatched_bytes(Em, ncb, bcm, Dm, Fm)
+    for name, probs in block_mixes:
+        ops_ = np.sort(rng.choice(3, size=(Em, ncb), p=probs), axis=1)
+        fm_blk = (ops_ != 2).astype(np.float32)
+        bm_blk = (ops_ == 0).astype(np.float32)
+        fs = jnp.asarray(np.repeat(fm_blk, bcm, axis=1))
+        bs = jnp.asarray(np.repeat(bm_blk, bcm, axis=1))
+        live_slots = max(bcm, int(fm_blk.sum(axis=1).max()) * bcm)
+        ncb_t = live_slots // bcm
+        kern = jax.jit(jax.value_and_grad(
+            lambda xb, wu, wg, wd: (gated_moe_ffn(
+                xb, wu, wg, wd, fs, bs, block_c=bcm,
+                live_slots=live_slots) * ctm).sum(), argnums=(0, 1, 2, 3)))
+        refp = jax.jit(jax.value_and_grad(
+            lambda xb, wu, wg, wd: (gated_moe_ffn_ref(
+                xb, wu, wg, wd, jnp.asarray(fm_blk), jnp.asarray(bm_blk),
+                act=jax.nn.silu, block_c=bcm) * ctm).sum(),
+            argnums=(0, 1, 2, 3)))
+        e_flops = sum(gated_moe_flops(fm_blk, bm_blk, bcm, Dm, Fm))
+        d_bytes = gated_moe_dispatched_bytes(Em, ncb_t, bcm, Dm, Fm)
+        record("moe", name, probs, timed_on(kern, xbm, wum, wgm, wdm),
+               timed_on(refp, xbm, wum, wgm, wdm),
+               {"fwd": int(fm_blk.sum()), "bwd": int(bm_blk.sum()),
+                "total": Em * ncb},
+               e_flops, mflops_full, d_bytes, mbytes_full)
+
     payload = {
         "bench": "kernel_backward",
         "shape": {"B": B, "H": H, "S": S, "head_dim": hd},

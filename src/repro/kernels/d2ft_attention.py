@@ -63,6 +63,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import contract as _contract
 from repro.kernels.compat import CompilerParams as _CompilerParams
 
 NEG_INF = -2.0 ** 30
@@ -122,22 +123,10 @@ def _tile_mask(qpos0, kpos0, block_q: int, block_k: int, seq_len: int,
 
 
 # ==================================================== compaction dispatch
-def _dispatch_count(live, N: int) -> int:
-    """Static number of slices to launch: the live-count upper bound clamped
-    to [1, N]; None disables compaction (dispatch all N slices)."""
-    if live is None or live >= N:
-        return N
-    return max(1, int(live))
-
-
-def _live_permutation(gate_flat, n_dispatch: int):
-    """First ``n_dispatch`` entries of the stable permutation that sorts
-    live (gate != 0) slices to the front, preserving original order within
-    each class. jit-compatible: the *values* are traced, the *size* is the
-    static schedule-derived bound — any dead slices padding the tail carry
-    gate 0 and are skipped block-level inside the kernels."""
-    dead = (gate_flat == 0).astype(jnp.int32)
-    return jnp.argsort(dead, stable=True)[:n_dispatch]
+# Shared across every gated kernel (ssd / rglru / moe speak the same
+# contract); canonical definitions live in repro.kernels.contract.
+_dispatch_count = _contract.dispatch_count
+_live_permutation = _contract.live_permutation
 
 
 # ================================================================== forward

@@ -16,6 +16,9 @@ import jax.numpy as jnp
 from repro.kernels.d2ft_attention import (d2ft_flash_attention,
                                           gated_flash_attention,
                                           pad_to_blocks)
+from repro.kernels import d2ft_moe as _moe
+from repro.kernels import d2ft_rglru as _rglru
+from repro.kernels import d2ft_ssd as _ssd
 from repro.kernels.lora_matmul import lora_matmul
 from repro.kernels.paged_decode import paged_flash_decode
 from repro.kernels import ref
@@ -120,6 +123,170 @@ def gated_attention(q, k, v, g_f, g_b=None, *, causal: bool = True,
                                  window=window, block_q=block_q,
                                  block_k=block_k, interpret=interpret,
                                  live_fwd=live_fwd, live_bwd=live_bwd)
+
+
+# ------------------------------------------------------- gated SSD / RG-LRU
+def _scan_pad(S: int, chunk: int):
+    """(Q, Sp): chunk size actually used and the padded length. Scan-shaped
+    inputs can't shrink tiles the way attention's select_blocks does (the
+    chunk is the recurrence granularity), so odd lengths always zero-pad up
+    to the next chunk multiple — safe because a padded row carries zero
+    log-decay (identity state update) and zero input."""
+    Q = min(chunk, S)
+    return Q, -(-S // Q) * Q
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret",
+                                             "live_fwd", "live_bwd"))
+def _gated_ssd_impl(x, da, Bm, Cm, g_f, g_b, *, chunk, interpret, live_fwd,
+                    live_bwd):
+    S = x.shape[1]
+    Q, Sp = _scan_pad(S, chunk)
+    if Sp != S:
+        pad = (0, Sp - S)
+        x = jnp.pad(x, ((0, 0), pad, (0, 0), (0, 0)))
+        da = jnp.pad(da, ((0, 0), pad, (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), pad, (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), pad, (0, 0)))
+    y = _ssd.gated_ssd_scan(x, da, Bm, Cm, g_f, g_b, Q,
+                            _auto_interpret(interpret), live_fwd, live_bwd)
+    return y[:, :S] if Sp != S else y
+
+
+def gated_ssd_scan(x, da, Bm, Cm, g_f, g_b=None, *, chunk: int,
+                   live_fwd: Optional[int] = None,
+                   live_bwd: Optional[int] = None,
+                   interpret: Optional[bool] = None):
+    """D2FT-gated SSD chunked scan with a gate-aware backward (custom VJP).
+
+    x: [B,S,H,P] dt-weighted input, da: [B,S,H] per-step log-decay
+    (``dt * A``), Bm/Cm: [B,S,N] (shared across heads); g_f, g_b: [B,H]
+    float {0,1} with g_b <= g_f per (sample, head) — g_f == 0 heads produce
+    zeros and skip the forward chunk loop (p_s), g_b == 0 heads skip every
+    backward matmul and get zero dx/ddA/dB/dC (p_o and p_s). Omitting g_b
+    uses g_b = g_f. live_fwd / live_bwd are static live-slice upper bounds
+    enabling compaction dispatch (``core.schedule.live_slice_bounds``
+    scaled by heads-per-group). S that doesn't divide the chunk is
+    zero-padded (identity decay) and sliced back — the recurrent-arch
+    analogue of attention's select_blocks pad path.
+    """
+    if g_b is None:
+        g_b = g_f
+    B, S, H, P = x.shape
+    _validate_gates(g_f, g_b, B, H, live_fwd, live_bwd)
+    return _gated_ssd_impl(x, da, Bm, Cm, g_f, g_b, chunk=chunk,
+                           interpret=interpret, live_fwd=live_fwd,
+                           live_bwd=live_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret",
+                                             "live_fwd", "live_bwd"))
+def _gated_rglru_impl(la, b, g_f, g_b, *, chunk, interpret, live_fwd,
+                      live_bwd):
+    S = la.shape[1]
+    Q, Sp = _scan_pad(S, chunk)
+    if Sp != S:
+        pad = ((0, 0), (0, Sp - S), (0, 0))
+        la, b = jnp.pad(la, pad), jnp.pad(b, pad)
+    h = _rglru.gated_rglru_scan(la, b, g_f, g_b, Q,
+                                _auto_interpret(interpret), live_fwd,
+                                live_bwd)
+    return h[:, :S] if Sp != S else h
+
+
+def gated_rglru_scan(la, b, g_f, g_b=None, *, chunk: int = 128,
+                     live_fwd: Optional[int] = None,
+                     live_bwd: Optional[int] = None,
+                     interpret: Optional[bool] = None):
+    """D2FT-gated RG-LRU scan h_t = exp(la_t) h_{t-1} + b_t (custom VJP).
+
+    la, b: [B,S,W] (la <= 0); g_f, g_b: [B,G] float {0,1} with g_b <= g_f
+    per (sample, channel-group), W % G == 0 — the W channels split into G
+    contiguous bands gating independently. Returns h [B,S,W] f32 with
+    g_f-dead bands exactly zero; g_b-dead bands contribute zero dla/db and
+    skip every backward contraction. live_fwd / live_bwd enable compaction
+    dispatch over the (B*G) slice axis. Odd S zero-pads to the chunk
+    (identity decay) and slices back.
+    """
+    if g_b is None:
+        g_b = g_f
+    B, S, W = la.shape
+    G = g_f.shape[1]
+    if W % G != 0:
+        raise ValueError(f"lru width {W} not divisible by G={G} gate groups")
+    _validate_gates(g_f, g_b, B, G, live_fwd, live_bwd)
+    return _gated_rglru_impl(la, b, g_f, g_b, chunk=chunk,
+                             interpret=interpret, live_fwd=live_fwd,
+                             live_bwd=live_bwd)
+
+
+# ------------------------------------------------------------ gated MoE FFN
+@functools.partial(jax.jit, static_argnames=("act", "block_c", "live_slots",
+                                             "interpret"))
+def _gated_moe_impl(xb, w_up, w_gate, w_down, fwd_slots, bwd_slots, *, act,
+                    block_c, live_slots, interpret):
+    E, C, D = xb.shape
+    bc = min(block_c, C)
+    Cp = -(-C // bc) * bc
+    n_cb = Cp // bc
+    # static capacity truncation: trailing blocks beyond the schedule's
+    # live-slot bound are provably empty — don't launch or stream them
+    if live_slots is not None and live_slots < Cp:
+        n_cb = min(n_cb, -(-max(1, int(live_slots)) // bc))
+    Cr = n_cb * bc
+    pad = ((0, 0), (0, max(0, Cr - C)))
+    xs = jnp.pad(xb, pad + ((0, 0),))[:, :Cr]
+    fm = jnp.pad(fwd_slots, pad)[:, :Cr].reshape(E, n_cb, bc)
+    bm = jnp.pad(bwd_slots, pad)[:, :Cr].reshape(E, n_cb, bc)
+    fm = (fm.sum(-1) > 0).astype(jnp.float32)
+    bm = (bm.sum(-1) > 0).astype(jnp.float32)
+    y = _moe.gated_moe_ffn(xs, w_up, w_gate, w_down, fm, bm, act, bc,
+                           _auto_interpret(interpret))
+    if Cr < C:
+        y = jnp.pad(y, ((0, 0), (0, C - Cr), (0, 0)))
+    return y[:, :C]
+
+
+def gated_moe_ffn(xb, w_up, w_gate, w_down, fwd_slots, bwd_slots=None, *,
+                  act: str = "silu", block_c: int = 128,
+                  live_slots: Optional[int] = None,
+                  interpret: Optional[bool] = None):
+    """Doubly-sparse MoE expert FFN over a capacity buffer (custom VJP).
+
+    xb: [E, C, D] front-packed capacity buffer (see models/moe.py's
+    gate-aware dispatch), w_up/w_gate: [E, D, F], w_down: [E, F, D];
+    fwd_slots / bwd_slots: [E, C] float {0,1} slot-occupancy masks
+    (bwd <= fwd elementwise — a slot's backward can't be live if its
+    forward isn't). Slots are grouped into capacity blocks of ``block_c``;
+    a block computes only when it holds at least one live slot
+    (``@pl.when`` skip otherwise). ``live_slots`` is a static upper bound
+    on live slots per expert (schedule live-sample bound x top_k): blocks
+    beyond it are truncated from the grid entirely — the MoE analogue of
+    compaction dispatch. Omitting bwd_slots uses bwd = fwd.
+    """
+    if bwd_slots is None:
+        bwd_slots = fwd_slots
+    E, C, D = xb.shape
+    if fwd_slots.shape != (E, C) or bwd_slots.shape != (E, C):
+        raise ValueError(
+            f"slot masks must be [E={E}, C={C}], got {fwd_slots.shape} / "
+            f"{bwd_slots.shape}")
+    cf, cb = _concrete(fwd_slots), _concrete(bwd_slots)
+    if cf is not None and cb is not None:
+        if np.any(cb > cf):
+            raise ValueError("bwd_slots <= fwd_slots violated: a slot with "
+                             "no live forward cannot have a live backward")
+        if live_slots is not None:
+            occupied = np.argwhere(cf != 0)
+            top = int(occupied[:, 1].max()) + 1 if occupied.size else 0
+            if live_slots < top:
+                raise ValueError(
+                    f"live_slots={live_slots} is below the highest occupied "
+                    f"slot {top}: the capacity-truncation bound must cover "
+                    "every live slot or their outputs would be zeroed")
+    return _gated_moe_impl(xb, w_up, w_gate, w_down, fwd_slots, bwd_slots,
+                           act=act, block_c=block_c, live_slots=live_slots,
+                           interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))

@@ -65,3 +65,111 @@ def lora_matmul_ref(x, w, a, b, scale: float):
     base = x @ w
     delta = (x @ a) @ b
     return base + scale * delta.astype(base.dtype)
+
+
+# ------------------------------------------------------------------ SSD scan
+def ssd_scan_ref(x, da, Bm, Cm, chunk: int):
+    """Ungated SSD chunked-scan oracle — ``models.ssm.ssd_chunked`` minus
+    the dt/A preprocessing (operands here are already the dt-weighted input
+    and per-step log-decay, matching the kernel boundary). x: [B,S,H,P];
+    da: [B,S,H]; Bm, Cm: [B,S,N]. Returns y: [B,S,H,P]."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    dac = da.reshape(Bsz, nc, Q, H)
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+    cum = jnp.cumsum(dac, axis=2)
+    total = cum[:, :, -1]
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)
+    y_intra = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", CB, L, xc)
+    decay_to_end = jnp.exp(total[:, :, None] - cum)
+    states = jnp.einsum("bckh,bckhp,bckn->bchpn", decay_to_end, xc,
+                        Bc).astype(jnp.float32)
+
+    def step(carry, inp):
+        st, tot = inp
+        return carry * jnp.exp(tot)[:, :, None, None] + st, carry
+    init = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        step, init, (jnp.moveaxis(states, 1, 0),
+                     jnp.moveaxis(total, 1, 0).astype(jnp.float32)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                         Cc.astype(jnp.float32), jnp.exp(cum), prev_states)
+    y = (y_intra.astype(jnp.float32) + y_inter).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype)
+
+
+def gated_ssd_ref(x, da, Bm, Cm, g_f, g_b, *, chunk: int):
+    """Reference VJP oracle for ``ops.gated_ssd_scan``: g_f gates the
+    forward per (sample, head), the (1 - g_b) share routes through
+    stop_gradient so p_o heads keep their value but no gradients."""
+    y = ssd_scan_ref(x, da, Bm, Cm, chunk)
+    gf = g_f[:, None, :, None].astype(y.dtype)
+    gb = g_b[:, None, :, None].astype(y.dtype)
+    return gf * (gb * y + (1.0 - gb) * jax.lax.stop_gradient(y))
+
+
+# --------------------------------------------------------------- RG-LRU scan
+def rglru_scan_ref(log_a, b, chunk: int):
+    """Ungated RG-LRU chunked-scan oracle: h_t = exp(log_a_t) h_{t-1} + b_t
+    via the same chunked log-space formulation as the kernel (exponents
+    always <= 0). log_a, b: [B,S,W] f32. Returns h: [B,S,W] f32."""
+    Bsz, S, W = log_a.shape
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    lac = log_a.reshape(Bsz, nc, Q, W).astype(jnp.float32)
+    bc = b.reshape(Bsz, nc, Q, W).astype(jnp.float32)
+    lc = jnp.cumsum(lac, axis=2)
+    diff = lc[:, :, :, None, :] - lc[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    Lm = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    h_intra = jnp.einsum("bcqkw,bckw->bcqw", Lm, bc)
+
+    def step(carry, inp):
+        hi, lcc = inp
+        h = hi + jnp.exp(lcc) * carry[:, None, :]
+        return h[:, -1], h
+    init = jnp.zeros((Bsz, W), jnp.float32)
+    _, hs = jax.lax.scan(step, init, (jnp.moveaxis(h_intra, 1, 0),
+                                      jnp.moveaxis(lc, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1).reshape(Bsz, S, W)
+
+
+def gated_rglru_ref(log_a, b, g_f, g_b, *, chunk: int):
+    """Reference VJP oracle for ``ops.gated_rglru_scan``: gates are
+    per (sample, channel-group), G = g_f.shape[1] slicing W into G
+    contiguous groups."""
+    h = rglru_scan_ref(log_a, b, chunk)
+    Bsz, S, W = h.shape
+    G = g_f.shape[1]
+    hg = h.reshape(Bsz, S, G, W // G)
+    gf = g_f[:, None, :, None].astype(h.dtype)
+    gb = g_b[:, None, :, None].astype(h.dtype)
+    hg = gf * (gb * hg + (1.0 - gb) * jax.lax.stop_gradient(hg))
+    return hg.reshape(Bsz, S, W)
+
+
+# ------------------------------------------------------------ MoE expert FFN
+def gated_moe_ffn_ref(xb, w_up, w_gate, w_down, fwd_mask, bwd_mask, *,
+                      act, block_c: int):
+    """Reference VJP oracle for ``ops.gated_moe_ffn``: the dense per-expert
+    gated-MLP einsum with the kernel's (expert, capacity-block) masks
+    applied as a stop-gradient mix. xb: [E,C,D]; w_up/w_gate: [E,D,F];
+    w_down: [E,F,D]; fwd_mask/bwd_mask: [E, n_cb] {0,1} over capacity
+    blocks of ``block_c`` slots (bwd <= fwd). ``act`` is the callable."""
+    E, C, D = xb.shape
+    h = jnp.einsum("ecd,edf->ecf", xb, w_up)
+    g = jnp.einsum("ecd,edf->ecf", xb, w_gate)
+    y = jnp.einsum("ecf,efd->ecd", act(g) * h, w_down)
+    mf = jnp.repeat(fwd_mask, block_c, axis=1)[:, :C, None].astype(y.dtype)
+    mb = jnp.repeat(bwd_mask, block_c, axis=1)[:, :C, None].astype(y.dtype)
+    return mf * (mb * y + (1.0 - mb) * jax.lax.stop_gradient(y))

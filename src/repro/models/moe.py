@@ -11,11 +11,12 @@ TP-within-expert on the hidden dim). This module stays mesh-agnostic.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kernel_ops
 from repro.models.layers import dense_init, _act
 from repro.configs.base import MoEConfig
 
@@ -38,8 +39,25 @@ def init_moe(key, d_model: int, cfg: MoEConfig, dtype):
 
 
 def apply_moe(params, x, cfg: MoEConfig, act: str = "silu",
-              shard_fn: Optional[Callable] = None):
-    """x: [B, S, d]. Returns (y, aux) where aux has load-balance/z losses."""
+              shard_fn: Optional[Callable] = None,
+              gates: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+              use_kernel: bool = False,
+              live_tokens: Optional[int] = None,
+              block_c: int = 128):
+    """x: [B, S, d]. Returns (y, aux) where aux has load-balance/z losses.
+
+    gates: optional per-sample D2FT gates (g_f, g_b), each [B] in {0, 1}
+    with g_b <= g_f — the schedule gate intersects the router's top-k:
+    assignments from g_f == 0 samples are dropped *at dispatch* (they never
+    occupy capacity slots), and within each expert segment g_b == 1
+    assignments sort first so backward-live slots pack into a prefix of
+    capacity blocks. The caller's gate_mix still owns the stop-gradient
+    semantics on the combined output. use_kernel routes the expert FFN
+    through the doubly-sparse Pallas kernel (``ops.gated_moe_ffn``) with
+    slot-occupancy masks; ``live_tokens`` is the schedule's static upper
+    bound on forward-live tokens (live samples x S), bounding live capacity
+    slots at ``live_tokens * top_k`` for compaction-style block truncation.
+    """
     B, S, D = x.shape
     T = B * S
     E, K, C_f = cfg.n_experts, cfg.top_k, cfg.capacity_factor
@@ -54,14 +72,32 @@ def apply_moe(params, x, cfg: MoEConfig, act: str = "silu",
     e_flat = top_e.reshape(T * K)
     tok_flat = jnp.repeat(jnp.arange(T), K)
     w_flat = top_w.reshape(T * K)
-    order = jnp.argsort(e_flat, stable=True)
+    if gates is None:
+        live_a = bwd_a = None
+        order = jnp.argsort(e_flat, stable=True)
+        counts = jnp.bincount(e_flat, length=E)                 # [E]
+    else:
+        g_f, g_b = gates
+        gf_t = jnp.repeat(g_f.reshape(B), S)                    # [T]
+        gb_t = jnp.repeat(g_b.reshape(B), S)
+        live_a = gf_t[tok_flat] > 0                             # [T*K]
+        bwd_a = gb_t[tok_flat] > 0
+        # sort key: (expert, bwd-dead-last) for live assignments; dead ones
+        # past every expert so they never claim a capacity slot
+        key = jnp.where(live_a,
+                        2 * e_flat + (1 - bwd_a.astype(e_flat.dtype)),
+                        2 * E)
+        order = jnp.argsort(key, stable=True)
+        counts = jnp.bincount(jnp.where(live_a, e_flat, E),
+                              length=E + 1)[:E]
     e_s, tok_s, w_s = e_flat[order], tok_flat[order], w_flat[order]
 
-    counts = jnp.bincount(e_flat, length=E)                     # [E]
     offsets = jnp.cumsum(counts) - counts                       # exclusive
     pos = jnp.arange(T * K) - offsets[e_s]                      # rank in segment
     capacity = int(max(1, round(T * K / E * C_f)))
     keep = pos < capacity
+    if live_a is not None:
+        keep = keep & live_a[order]
     pos_c = jnp.where(keep, pos, capacity)                      # OOB -> drop
 
     buf = jnp.zeros((E, capacity + 1, D), x.dtype)
@@ -70,12 +106,27 @@ def apply_moe(params, x, cfg: MoEConfig, act: str = "silu",
     if shard_fn is not None:
         buf = shard_fn(buf)
 
-    h = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
-    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
-    h = _act(act)(g) * h
-    out_e = jnp.einsum("ecf,efd->ecd", h, params["w_down"])     # [E, C, D]
-    if shard_fn is not None:
-        out_e = shard_fn(out_e)
+    if use_kernel and gates is not None and shard_fn is None:
+        keep_f = keep.astype(jnp.float32)
+        keep_b = (keep & bwd_a[order]).astype(jnp.float32)
+        fwd_slots = jnp.zeros((E, capacity + 1), jnp.float32)
+        fwd_slots = fwd_slots.at[e_s, pos_c].add(keep_f)[:, :capacity]
+        bwd_slots = jnp.zeros((E, capacity + 1), jnp.float32)
+        bwd_slots = bwd_slots.at[e_s, pos_c].add(keep_b)[:, :capacity]
+        live_slots = (min(capacity, int(live_tokens) * K)
+                      if live_tokens is not None else None)
+        out_e = kernel_ops.gated_moe_ffn(
+            buf, params["w_up"], params["w_gate"], params["w_down"],
+            fwd_slots, bwd_slots, act=act, block_c=block_c,
+            live_slots=live_slots)
+        out_e = out_e.astype(x.dtype)
+    else:
+        h = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+        g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+        h = _act(act)(g) * h
+        out_e = jnp.einsum("ecf,efd->ecd", h, params["w_down"])  # [E, C, D]
+        if shard_fn is not None:
+            out_e = shard_fn(out_e)
 
     y = jnp.zeros((T, D), x.dtype)
     contrib = out_e[e_s, jnp.minimum(pos_c, capacity - 1)]

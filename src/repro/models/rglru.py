@@ -18,9 +18,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import RGLRUConfig
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
 from repro.models.layers import dense_init
 
 _C = 8.0
+# chunk used by both the gated Pallas kernel and its masked reference mix --
+# they must match so the two paths see identical chunked-scan numerics
+_SCAN_CHUNK = 128
 
 
 def init_rglru(key, d_model: int, cfg: RGLRUConfig, dtype):
@@ -43,8 +48,9 @@ def init_rglru(key, d_model: int, cfg: RGLRUConfig, dtype):
     }
 
 
-def _rglru_gates(params, x):
-    """x: [..., width] (post-conv). Returns (log_a, gated_input)."""
+def _rglru_log_gates(params, x):
+    """x: [..., width] (post-conv). Returns (log_a, gated_input) in f32 —
+    the log-space operands the chunked/kernel scan consumes directly."""
     r = jax.nn.sigmoid(x @ params["w_a"] + params["b_a"])
     i = jax.nn.sigmoid(x @ params["w_x"] + params["b_x"])
     log_a = -_C * jax.nn.softplus(params["Lambda"].astype(jnp.float32)) * \
@@ -52,7 +58,13 @@ def _rglru_gates(params, x):
     a = jnp.exp(log_a)
     beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
     b = beta * (i * x).astype(jnp.float32)
-    return a, b
+    return log_a, b
+
+
+def _rglru_gates(params, x):
+    """x: [..., width] (post-conv). Returns (a, gated_input)."""
+    log_a, b = _rglru_log_gates(params, x)
+    return jnp.exp(log_a), b
 
 
 def _assoc_scan(a, b, h0=None):
@@ -77,10 +89,36 @@ def _causal_conv(x, conv_w, conv_b, prev=None):
     return sum(xp[:, i:i + x.shape[1]] * conv_w[i] for i in range(W)) + conv_b
 
 
+def _gated_scan_ref(log_a, b, g_f, g_b):
+    """Masked-path gated scan: the chunked log-space oracle (which the
+    kernel mirrors op for op) with the stop-gradient mix, zero-padded to
+    the chunk like ``ops.gated_rglru_scan`` pads for the kernel."""
+    S = log_a.shape[1]
+    Q = min(_SCAN_CHUNK, S)
+    Sp = -(-S // Q) * Q
+    if Sp != S:
+        pad = ((0, 0), (0, Sp - S), (0, 0))
+        log_a, b = jnp.pad(log_a, pad), jnp.pad(b, pad)
+    h = kernel_ref.gated_rglru_ref(log_a, b, g_f, g_b, chunk=_SCAN_CHUNK)
+    return h[:, :S] if Sp != S else h
+
+
 def apply_rglru(params, x, cfg: RGLRUConfig,
                 head_scale: Optional[jnp.ndarray] = None,
-                return_state: bool = False):
+                return_state: bool = False,
+                gates: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                use_kernel: bool = False,
+                live_bounds: Optional[Tuple[int, int]] = None):
     """Training/prefill forward. x: [B,S,d_model] -> [B,S,d_model].
+
+    gates: optional per-group D2FT gates (g_f, g_b), each [B, G] in {0, 1}
+    with g_b <= g_f — the G gate groups slice the LRU width into contiguous
+    channel bands, gated on the scan output before the gate-branch multiply
+    (the (1 - g_b) share routes through stop_gradient). use_kernel runs the
+    gated scan in the Pallas kernel (``ops.gated_rglru_scan``) with
+    ``live_bounds`` = static (live_fwd, live_bwd) band-slice upper bounds
+    for compaction dispatch; otherwise the chunked reference scan with a
+    masked stop-gradient mix computes the same function.
 
     return_state: additionally return the decode cache after the last token
     (``init_rglru_cache`` structure: the conv tail of raw pre-conv inputs
@@ -88,8 +126,19 @@ def apply_rglru(params, x, cfg: RGLRUConfig,
     gate = jax.nn.gelu(x @ params["w_gate_branch"])
     u_raw = x @ params["w_rec_branch"]
     u = _causal_conv(u_raw, params["conv_w"], params["conv_b"])
-    a, b = _rglru_gates(params, u)
-    h32 = _assoc_scan(a, b)                             # [B,S,W] f32
+    if gates is not None:
+        g_f, g_b = gates
+        log_a, b = _rglru_log_gates(params, u)
+        if use_kernel and not return_state:
+            lf, lb = live_bounds if live_bounds is not None else (None, None)
+            h32 = kernel_ops.gated_rglru_scan(log_a, b, g_f, g_b,
+                                              chunk=_SCAN_CHUNK,
+                                              live_fwd=lf, live_bwd=lb)
+        else:
+            h32 = _gated_scan_ref(log_a, b, g_f, g_b)
+    else:
+        a, b = _rglru_gates(params, u)
+        h32 = _assoc_scan(a, b)                         # [B,S,W] f32
     h = h32.astype(x.dtype)
     if head_scale is not None:
         H = head_scale.shape[-1]

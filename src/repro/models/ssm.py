@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SSMConfig
+from repro.kernels import ops as kernel_ops
 from repro.models.layers import dense_init
 
 
@@ -79,8 +80,16 @@ def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, return_final_state=False):
     Bsz, S, H, P = xh.shape
     N = Bm.shape[-1]
     Q = min(chunk, S)
-    assert S % Q == 0, (S, Q)
-    nc = S // Q
+    Sp = -(-S // Q) * Q
+    if Sp != S:
+        # odd lengths zero-pad to the chunk: a padded row has dt == 0, so
+        # its log-decay is 0 (identity state update) and its input is zero
+        pad = ((0, 0), (0, Sp - S))
+        xh = jnp.pad(xh, pad + ((0, 0), (0, 0)))
+        dt = jnp.pad(dt, pad + ((0, 0),))
+        Bm = jnp.pad(Bm, pad + ((0, 0),))
+        Cm = jnp.pad(Cm, pad + ((0, 0),))
+    nc = Sp // Q
     # decay per step (log-space), weighted input
     dA = dt * A[None, None, :]                          # [B,S,H] (negative)
     xbar = xh * dt[..., None]                           # dt-weighted input
@@ -121,8 +130,10 @@ def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, return_final_state=False):
     # ---- inter-chunk output: y_q += C_q . (exp(cum_q) * prev_state)
     y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
                          Cc.astype(jnp.float32), jnp.exp(cum), prev_states)
-    y = (y_intra.astype(jnp.float32) + y_inter).reshape(Bsz, S, H, P)
+    y = (y_intra.astype(jnp.float32) + y_inter).reshape(Bsz, Sp, H, P)
     y = y.astype(xh.dtype)
+    if Sp != S:
+        y = y[:, :S]
     if return_final_state:
         return y, final_state
     return y
@@ -130,14 +141,25 @@ def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, return_final_state=False):
 
 def apply_ssd(params, x, d_model: int, cfg: SSMConfig,
               head_scale: Optional[jnp.ndarray] = None,
-              return_state: bool = False):
+              return_state: bool = False,
+              gates: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+              use_kernel: bool = False,
+              live_bounds: Optional[Tuple[int, int]] = None):
     """Training/prefill forward. x: [B,S,d_model] -> [B,S,d_model].
+
+    gates: optional per-head D2FT gates (g_f, g_b), each [B, H] in {0, 1}
+    with g_b <= g_f — the scan output is gated per (sample, head) *before*
+    the D-residual (the skip connection IS the p_s shortcut path) with the
+    (1 - g_b) share routed through stop_gradient. use_kernel routes the
+    gated scan through the Pallas kernel (``ops.gated_ssd_scan``) with
+    ``live_bounds`` = static (live_fwd, live_bwd) head-slice upper bounds
+    for compaction dispatch; otherwise a masked stop-gradient mix over the
+    dense chunked scan computes the same function (the reference VJP).
 
     return_state: additionally return the decode cache after the last token
     (same structure as ``init_ssd_cache``: the conv tail of raw xBC inputs
     plus the f32 recurrent state) — the serving prefill dump, so a decode
     loop can continue the sequence without replaying it token by token.
-    Requires S to be a multiple of the SSD chunk like the forward itself.
     """
     d_inner, H, P, N = _dims(d_model, cfg)
     z, xBC_raw, dt = _split_in(params, x, d_model, cfg)
@@ -147,11 +169,28 @@ def apply_ssd(params, x, d_model: int, cfg: SSMConfig,
     Cm = xBC[..., d_inner + N:]
     dt = jax.nn.softplus(dt + params["dt_bias"])
     A = -jnp.exp(params["A_log"].astype(jnp.float32))
-    y = ssd_chunked(xin, dt, A, Bm, Cm, cfg.chunk,
-                    return_final_state=return_state)
-    state = None
-    if return_state:
-        y, state = y
+    if gates is not None and use_kernel and not return_state:
+        g_f, g_b = gates
+        # same operand preprocessing as ssd_chunked; the kernel pads odd S
+        dA = dt * A[None, None, :]
+        xbar = xin * dt[..., None]
+        lf, lb = live_bounds if live_bounds is not None else (None, None)
+        y = kernel_ops.gated_ssd_scan(xbar, dA, Bm, Cm, g_f, g_b,
+                                      chunk=cfg.chunk, live_fwd=lf,
+                                      live_bwd=lb)
+        y = y.astype(xin.dtype)
+        state = None
+    else:
+        y = ssd_chunked(xin, dt, A, Bm, Cm, cfg.chunk,
+                        return_final_state=return_state)
+        state = None
+        if return_state:
+            y, state = y
+        if gates is not None:
+            g_f, g_b = gates
+            gf = g_f[:, None, :, None].astype(y.dtype)
+            gb = g_b[:, None, :, None].astype(y.dtype)
+            y = gf * (gb * y + (1.0 - gb) * jax.lax.stop_gradient(y))
     y = y + params["D"][None, None, :, None] * xin
     if head_scale is not None:
         y = y * head_scale[:, None, :, None].astype(y.dtype)

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, RGLRU, SSD,
                                 ModelConfig)
+from repro.kernels import contract as kernel_contract
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
@@ -131,6 +132,9 @@ def _apply_attn_inner(p, h, kind, cfg: ModelConfig, layer_gates, policy,
                                           window=window,
                                           live_bounds=kernel_bounds)
     else:
+        if use_kernel and policy is not None:
+            kernel_contract.report_fallback(
+                "attn", "sharded policy path has no kernel route")
         if policy is not None:
             q, k, v = policy.heads(q), policy.kv(k), policy.kv(v)
         chunk = policy.attn_q_chunk if policy is not None else 0
@@ -155,9 +159,13 @@ def _apply_attn_inner(p, h, kind, cfg: ModelConfig, layer_gates, policy,
     return gate_mix(c_g, g_f, g_b).sum(axis=2)
 
 
-def _apply_ffn(p, h, cfg: ModelConfig, layer_gates, policy):
+def _apply_ffn(p, h, cfg: ModelConfig, layer_gates, policy,
+               use_kernel: bool = False, live_bounds=None):
     if "moe" in p:
         if policy is not None and policy.moe_sharded(cfg):
+            if use_kernel:
+                kernel_contract.report_fallback(
+                    "moe", "sharded expert-parallel path has no kernel route")
             y, aux = moe_mod.apply_moe_ep(
                 p["moe"], h, cfg.moe, cfg.mlp_act, policy.mesh,
                 policy.batch_axes if
@@ -166,9 +174,23 @@ def _apply_ffn(p, h, cfg: ModelConfig, layer_gates, policy):
                 and h.shape[1] > 1,
                 expert_parallel=policy.expert_parallel)
         else:
+            if use_kernel and policy is not None:
+                kernel_contract.report_fallback(
+                    "moe", "sharded policy path has no kernel route")
+            moe_gates = None
+            live_toks = None
+            if layer_gates is not None:
+                g_f, g_b = layer_gates
+                # MoE is one D2FT group (G position 0): per-sample gates
+                moe_gates = (g_f[:, 0], g_b[:, 0])
+                if live_bounds is not None:
+                    live_toks = min(h.shape[0], live_bounds[0]) * h.shape[1]
             y, aux = moe_mod.apply_moe(
                 p["moe"], h, cfg.moe, act=cfg.mlp_act,
-                shard_fn=policy.moe if policy is not None else None)
+                shard_fn=policy.moe if policy is not None else None,
+                gates=moe_gates,
+                use_kernel=use_kernel and policy is None,
+                live_tokens=live_toks)
         if layer_gates is not None:
             g_f, g_b = layer_gates
             y = gate_mix(y[:, :, None, :], g_f[:, :1], g_b[:, :1])[:, :, 0]
@@ -191,31 +213,63 @@ def _apply_ffn(p, h, cfg: ModelConfig, layer_gates, policy):
     return gate_mix(c_g, g_f, g_b).sum(axis=2), None
 
 
-def _apply_ssd_inner(p, h, cfg: ModelConfig, layer_gates):
+def _apply_ssd_inner(p, h, cfg: ModelConfig, layer_gates,
+                     use_kernel: bool = False, live_bounds=None):
     if layer_gates is None:
         return ssm_mod.apply_ssd(p, h, cfg.d_model, cfg.ssm)
-    # gate per SSD head-group: run heads, mix via head_scale decomposition.
     g_f, g_b = layer_gates
     G = g_f.shape[-1]
     d_inner, H, P, N = ssm_mod._dims(cfg.d_model, cfg.ssm)
-    # Per-group mixing needs the contribution split; cheapest correct form:
-    # run twice (full and stop-grad) and mix. Masked path is test-scale only.
-    full = ssm_mod.apply_ssd(p, h, cfg.d_model, cfg.ssm)
-    sg = jax.lax.stop_gradient(full)
-    gf = g_f[:, :1].mean(-1)[:, None, None]             # block granularity
-    gb = g_b[:, :1].mean(-1)[:, None, None]
-    return gf * (gb * full + (1 - gb) * sg)
+    if H % G != 0:
+        # heads don't tile into gate groups: fall back to the coarse
+        # block-granularity run-twice mix (test-scale only)
+        if use_kernel:
+            kernel_contract.report_fallback(
+                "ssd", f"H={H} not divisible by G={G} gate groups")
+        full = ssm_mod.apply_ssd(p, h, cfg.d_model, cfg.ssm)
+        sg = jax.lax.stop_gradient(full)
+        gf = g_f[:, :1].mean(-1)[:, None, None]         # block granularity
+        gb = g_b[:, :1].mean(-1)[:, None, None]
+        return gf * (gb * full + (1 - gb) * sg)
+    # gate per SSD head: each of the G schedule groups spans H // G
+    # consecutive heads; the scan is gated per (sample, head) inside
+    # apply_ssd (kernel or masked mix) before the D-residual shortcut.
+    rep = H // G
+    gf_h = jnp.repeat(g_f, rep, axis=1).astype(jnp.float32)
+    gb_h = jnp.repeat(g_b, rep, axis=1).astype(jnp.float32)
+    kernel_bounds = None
+    if live_bounds is not None:
+        kernel_bounds = (live_bounds[0] * rep, live_bounds[1] * rep)
+    return ssm_mod.apply_ssd(p, h, cfg.d_model, cfg.ssm,
+                             gates=(gf_h, gb_h), use_kernel=use_kernel,
+                             live_bounds=kernel_bounds)
 
 
-def _apply_rglru_inner(p, h, cfg: ModelConfig, layer_gates):
+def _apply_rglru_inner(p, h, cfg: ModelConfig, layer_gates,
+                      use_kernel: bool = False, live_bounds=None):
     if layer_gates is None:
         return rglru_mod.apply_rglru(p, h, cfg.rglru)
-    full = rglru_mod.apply_rglru(p, h, cfg.rglru)
-    sg = jax.lax.stop_gradient(full)
     g_f, g_b = layer_gates
-    gf = g_f[:, :1].mean(-1)[:, None, None]
-    gb = g_b[:, :1].mean(-1)[:, None, None]
-    return gf * (gb * full + (1 - gb) * sg)
+    G = g_f.shape[-1]
+    W = cfg.rglru.lru_width or cfg.d_model
+    if W % G != 0:
+        # width doesn't tile into gate groups: coarse run-twice mix
+        if use_kernel:
+            kernel_contract.report_fallback(
+                "rglru", f"lru width={W} not divisible by G={G} gate groups")
+        full = rglru_mod.apply_rglru(p, h, cfg.rglru)
+        sg = jax.lax.stop_gradient(full)
+        gf = g_f[:, :1].mean(-1)[:, None, None]
+        gb = g_b[:, :1].mean(-1)[:, None, None]
+        return gf * (gb * full + (1 - gb) * sg)
+    # gates stay at (sample, group) granularity: the G groups slice the LRU
+    # width into contiguous channel bands (the kernel's slice axis is B*G,
+    # so schedule live bounds pass through unscaled)
+    gf = g_f.astype(jnp.float32)
+    gb = g_b.astype(jnp.float32)
+    return rglru_mod.apply_rglru(p, h, cfg.rglru, gates=(gf, gb),
+                                 use_kernel=use_kernel,
+                                 live_bounds=live_bounds)
 
 
 def apply_block(p, x, kind: str, cfg: ModelConfig, layer_gates=None,
@@ -226,9 +280,11 @@ def apply_block(p, x, kind: str, cfg: ModelConfig, layer_gates=None,
         c = _apply_attn_inner(p["attn"], h, kind, cfg, layer_gates, policy,
                               use_kernel, live_bounds)
     elif kind == SSD:
-        c = _apply_ssd_inner(p["ssd"], h, cfg, layer_gates)
+        c = _apply_ssd_inner(p["ssd"], h, cfg, layer_gates, use_kernel,
+                             live_bounds)
     elif kind == RGLRU:
-        c = _apply_rglru_inner(p["rglru"], h, cfg, layer_gates)
+        c = _apply_rglru_inner(p["rglru"], h, cfg, layer_gates, use_kernel,
+                               live_bounds)
     if policy is not None:
         # constrain the CONTRIBUTION before the residual add so GSPMD emits
         # a reduce-scatter of the partial-sum projection instead of
@@ -240,7 +296,8 @@ def apply_block(p, x, kind: str, cfg: ModelConfig, layer_gates=None,
     aux = None
     if "norm2" in p:
         h2 = apply_norm(p["norm2"], x, cfg.norm)
-        y, aux = _apply_ffn(p, h2, cfg, layer_gates, policy)
+        y, aux = _apply_ffn(p, h2, cfg, layer_gates, policy, use_kernel,
+                            live_bounds)
         if policy is not None:
             y = policy.residual(y)
         x = x + y

@@ -1,0 +1,421 @@
+"""Gated block kernel contract: SSD / RG-LRU / MoE kernels.
+
+Mirrors tests/test_kernel_grads.py for the three non-attention kernels
+(kernels/contract.py is the shared interface): grad parity vs the
+reference VJPs under random p_f/p_o/p_s mixes — including odd
+non-chunk-multiple sequence lengths through the pad path — exact-zero
+gradients for g_b == 0 slices, the g_b <= g_f invariant, zero gate
+cotangents, and hypothesis properties tying *executed* work (via the
+on_dispatch / on_backward_block hooks) to ``core.schedule
+.live_slice_bounds`` exactly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import optional_hypothesis
+from repro.core.schedule import (Schedule, gates_from_schedule,
+                                 live_slice_bounds)
+from repro.data.synthetic import microbatch_assignment
+from repro.kernels import contract
+from repro.kernels import d2ft_moe as d2m
+from repro.kernels import d2ft_rglru as d2r
+from repro.kernels import d2ft_ssd as d2s
+from repro.kernels import ops
+from repro.kernels.ref import (gated_moe_ffn_ref, gated_rglru_ref,
+                               gated_ssd_ref)
+from repro.models.layers import _act
+
+given, settings, st = optional_hypothesis()
+
+TOL = 1e-4   # fp32, interpret mode
+
+
+def _mix(rng, B, H):
+    """ops 0=p_f, 1=p_o, 2=p_s -> (g_f, g_b) with g_b <= g_f."""
+    ops_ = rng.integers(0, 3, (B, H))
+    g_f = jnp.asarray((ops_ != 2).astype(np.float32))
+    g_b = jnp.asarray((ops_ == 0).astype(np.float32))
+    return ops_, g_f, g_b
+
+
+# ======================================================================= SSD
+def _ssd_operands(key, B, S, H, P, N):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    da = -jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))   # log-decay
+    Bm = jax.random.normal(ks[2], (B, S, N)) * 0.5
+    Cm = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    do = jax.random.normal(ks[4], (B, S, H, P))
+    return x, da, Bm, Cm, do
+
+
+def _ssd_ref(x, da, Bm, Cm, g_f, g_b, chunk):
+    """Reference with the wrapper's zero-pad path (the oracle itself
+    requires chunk-multiple S)."""
+    S = x.shape[1]
+    Q = min(chunk, S)
+    Sp = -(-S // Q) * Q
+    if Sp != S:
+        p = ((0, 0), (0, Sp - S))
+        x = jnp.pad(x, p + ((0, 0), (0, 0)))
+        da = jnp.pad(da, p + ((0, 0),))
+        Bm = jnp.pad(Bm, p + ((0, 0),))
+        Cm = jnp.pad(Cm, p + ((0, 0),))
+    return gated_ssd_ref(x, da, Bm, Cm, g_f, g_b, chunk=chunk)[:, :S]
+
+
+@pytest.mark.parametrize("S,chunk", [(64, 16), (257, 64)])
+def test_ssd_grad_parity_vs_reference_vjp(S, chunk):
+    """S=257 exercises the recurrent-arch pad path end to end (backward
+    included) — the odd-length analogue of attention's select_blocks."""
+    B, H, P, N = 2, 4, 8, 8
+    x, da, Bm, Cm, do = _ssd_operands(jax.random.PRNGKey(0), B, S, H, P, N)
+    _, g_f, g_b = _mix(np.random.default_rng(S), B, H)
+
+    out_k, vjp_k = jax.vjp(
+        lambda x, da, Bm, Cm: ops.gated_ssd_scan(
+            x, da, Bm, Cm, g_f, g_b, chunk=chunk, interpret=True),
+        x, da, Bm, Cm)
+    out_r, vjp_r = jax.vjp(
+        lambda x, da, Bm, Cm: _ssd_ref(x, da, Bm, Cm, g_f, g_b, chunk),
+        x, da, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=TOL, rtol=TOL)
+    for name, a, b in zip(("dx", "dda", "dB", "dC"), vjp_k(do), vjp_r(do)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=TOL,
+                                   rtol=TOL, err_msg=name)
+
+
+def test_ssd_gb_zero_heads_have_exact_zero_grads():
+    B, H, S, P, N = 2, 4, 32, 8, 8
+    x, da, Bm, Cm, _ = _ssd_operands(jax.random.PRNGKey(1), B, S, H, P, N)
+    _, g_f, g_b = _mix(np.random.default_rng(3), B, H)
+
+    def loss(x, da):
+        return ops.gated_ssd_scan(x, da, Bm, Cm, g_f, g_b, chunk=8,
+                                  interpret=True).sum()
+
+    dx, dda = jax.grad(loss, argnums=(0, 1))(x, da)
+    gb = np.asarray(g_b)
+    assert np.all(np.asarray(dx).transpose(0, 2, 1, 3)[gb == 0] == 0.0)
+    assert np.all(np.asarray(dda).transpose(0, 2, 1)[gb == 0] == 0.0)
+    assert float(np.abs(np.asarray(dx).transpose(0, 2, 1, 3)[gb == 1]).max()) > 0
+    # g_f == 0 heads produce exact-zero forward output
+    y = np.asarray(ops.gated_ssd_scan(x, da, Bm, Cm, g_f, g_b, chunk=8,
+                                      interpret=True))
+    assert np.all(y.transpose(0, 2, 1, 3)[np.asarray(g_f) == 0] == 0.0)
+
+
+def test_ssd_gates_get_zero_cotangents():
+    B, H, S, P, N = 1, 2, 16, 4, 4
+    x, da, Bm, Cm, _ = _ssd_operands(jax.random.PRNGKey(2), B, S, H, P, N)
+    g = jnp.ones((B, H))
+
+    def loss(g_f, g_b):
+        return ops.gated_ssd_scan(x, da, Bm, Cm, g_f, g_b, chunk=8,
+                                  interpret=True).sum()
+
+    dgf, dgb = jax.grad(loss, argnums=(0, 1))(g, g)
+    assert float(jnp.abs(dgf).max()) == 0.0
+    assert float(jnp.abs(dgb).max()) == 0.0
+
+
+# ==================================================================== RG-LRU
+def _rglru_operands(key, B, S, W):
+    ks = jax.random.split(key, 3)
+    la = -jax.nn.softplus(jax.random.normal(ks[0], (B, S, W)))
+    b = jax.random.normal(ks[1], (B, S, W))
+    do = jax.random.normal(ks[2], (B, S, W))
+    return la, b, do
+
+
+def _rglru_ref(la, b, g_f, g_b, chunk):
+    S = la.shape[1]
+    Q = min(chunk, S)
+    Sp = -(-S // Q) * Q
+    if Sp != S:
+        p = ((0, 0), (0, Sp - S), (0, 0))
+        la, b = jnp.pad(la, p), jnp.pad(b, p)
+    return gated_rglru_ref(la, b, g_f, g_b, chunk=chunk)[:, :S]
+
+
+@pytest.mark.parametrize("S,chunk", [(64, 16), (257, 64)])
+def test_rglru_grad_parity_vs_reference_vjp(S, chunk):
+    B, W, G = 2, 32, 4
+    la, b, do = _rglru_operands(jax.random.PRNGKey(0), B, S, W)
+    _, g_f, g_b = _mix(np.random.default_rng(S + 1), B, G)
+
+    out_k, vjp_k = jax.vjp(
+        lambda la, b: ops.gated_rglru_scan(la, b, g_f, g_b, chunk=chunk,
+                                           interpret=True), la, b)
+    out_r, vjp_r = jax.vjp(
+        lambda la, b: _rglru_ref(la, b, g_f, g_b, chunk), la, b)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=TOL, rtol=TOL)
+    for name, a, bb in zip(("dla", "db"), vjp_k(do), vjp_r(do)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bb), atol=TOL,
+                                   rtol=TOL, err_msg=name)
+
+
+def test_rglru_gb_zero_bands_have_exact_zero_grads():
+    B, S, W, G = 2, 32, 32, 4
+    Wg = W // G
+    la, b, _ = _rglru_operands(jax.random.PRNGKey(1), B, S, W)
+    _, g_f, g_b = _mix(np.random.default_rng(5), B, G)
+
+    def loss(la, b):
+        return ops.gated_rglru_scan(la, b, g_f, g_b, chunk=8,
+                                    interpret=True).sum()
+
+    dla, db = jax.grad(loss, argnums=(0, 1))(la, b)
+    for g in (dla, db):
+        g = np.asarray(g).reshape(B, S, G, Wg).transpose(0, 2, 1, 3)
+        assert np.all(g[np.asarray(g_b) == 0] == 0.0)
+    h = np.asarray(ops.gated_rglru_scan(la, b, g_f, g_b, chunk=8,
+                                        interpret=True))
+    h = h.reshape(B, S, G, Wg).transpose(0, 2, 1, 3)
+    assert np.all(h[np.asarray(g_f) == 0] == 0.0)
+
+
+# ======================================================================= MoE
+def _moe_operands(key, E, C, D, F):
+    ks = jax.random.split(key, 5)
+    xb = jax.random.normal(ks[0], (E, C, D))
+    wu = jax.random.normal(ks[1], (E, D, F)) / np.sqrt(D)
+    wg = jax.random.normal(ks[2], (E, D, F)) / np.sqrt(D)
+    wd = jax.random.normal(ks[3], (E, F, D)) / np.sqrt(F)
+    do = jax.random.normal(ks[4], (E, C, D))
+    return xb, wu, wg, wd, do
+
+
+def _slot_masks(rng, E, C):
+    """Random slot masks with bwd <= fwd (float {0,1})."""
+    ops_ = rng.integers(0, 3, (E, C))
+    return (jnp.asarray((ops_ != 2).astype(np.float32)),
+            jnp.asarray((ops_ == 0).astype(np.float32)))
+
+
+def _moe_block_masks(fwd_slots, bwd_slots, C, block_c):
+    """The wrapper's slot->block reduction, for the reference."""
+    bc = min(block_c, C)
+    Cp = -(-C // bc) * bc
+    pad = ((0, 0), (0, Cp - C))
+    fm = np.pad(np.asarray(fwd_slots), pad).reshape(-1, Cp // bc, bc)
+    bm = np.pad(np.asarray(bwd_slots), pad).reshape(-1, Cp // bc, bc)
+    return (jnp.asarray((fm.sum(-1) > 0).astype(np.float32)),
+            jnp.asarray((bm.sum(-1) > 0).astype(np.float32)), bc)
+
+
+@pytest.mark.parametrize("C,block_c", [(64, 16), (57, 16)])
+@pytest.mark.parametrize("act", ["silu", "gelu"])
+def test_moe_grad_parity_vs_reference_vjp(C, block_c, act):
+    """C=57 exercises the capacity pad path (57 -> 4 blocks of 16)."""
+    E, D, F = 4, 16, 32
+    xb, wu, wg, wd, do = _moe_operands(jax.random.PRNGKey(0), E, C, D, F)
+    fs, bs = _slot_masks(np.random.default_rng(C), E, C)
+    fm, bm, bc = _moe_block_masks(fs, bs, C, block_c)
+
+    out_k, vjp_k = jax.vjp(
+        lambda xb, wu, wg, wd: ops.gated_moe_ffn(
+            xb, wu, wg, wd, fs, bs, act=act, block_c=block_c,
+            interpret=True), xb, wu, wg, wd)
+    out_r, vjp_r = jax.vjp(
+        lambda xb, wu, wg, wd: gated_moe_ffn_ref(
+            xb, wu, wg, wd, fm, bm, act=_act(act), block_c=bc),
+        xb, wu, wg, wd)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=TOL, rtol=TOL)
+    for name, a, b in zip(("dx", "dwu", "dwg", "dwd"), vjp_k(do),
+                          vjp_r(do)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=TOL,
+                                   rtol=TOL, err_msg=name)
+
+
+def test_moe_dead_block_slots_have_exact_zero_grads():
+    E, C, D, F, bc = 2, 32, 8, 16, 8
+    xb, wu, wg, wd, _ = _moe_operands(jax.random.PRNGKey(1), E, C, D, F)
+    fs = jnp.ones((E, C))
+    # expert 0: first block backward-live only; expert 1: all dead
+    bs = np.zeros((E, C), np.float32)
+    bs[0, :bc] = 1.0
+    bs = jnp.asarray(bs)
+
+    def loss(xb):
+        return ops.gated_moe_ffn(xb, wu, wg, wd, fs, bs, block_c=bc,
+                                 interpret=True).sum()
+
+    dx = np.asarray(jax.grad(loss)(xb))
+    assert np.all(dx[1] == 0.0)
+    assert np.all(dx[0, bc:] == 0.0)
+    assert float(np.abs(dx[0, :bc]).max()) > 0.0
+
+
+# ============================================================== invariants
+def test_ssd_gb_gt_gf_rejected():
+    x, da, Bm, Cm, _ = _ssd_operands(jax.random.PRNGKey(0), 1, 16, 2, 4, 4)
+    with pytest.raises(ValueError, match="g_b <= g_f"):
+        ops.gated_ssd_scan(x, da, Bm, Cm, jnp.asarray([[1., 0.]]),
+                           jnp.asarray([[1., 1.]]), chunk=8, interpret=True)
+
+
+def test_ssd_undersized_live_bound_rejected():
+    x, da, Bm, Cm, _ = _ssd_operands(jax.random.PRNGKey(0), 1, 16, 4, 4, 4)
+    g = jnp.ones((1, 4))
+    with pytest.raises(ValueError, match="live_bwd=2 is below"):
+        ops.gated_ssd_scan(x, da, Bm, Cm, g, g, chunk=8, interpret=True,
+                           live_fwd=4, live_bwd=2)
+
+
+def test_rglru_gb_gt_gf_rejected():
+    la, b, _ = _rglru_operands(jax.random.PRNGKey(0), 1, 16, 8)
+    with pytest.raises(ValueError, match="g_b <= g_f"):
+        ops.gated_rglru_scan(la, b, jnp.asarray([[1., 0.]]),
+                             jnp.asarray([[1., 1.]]), chunk=8,
+                             interpret=True)
+
+
+def test_rglru_width_not_divisible_rejected():
+    la, b, _ = _rglru_operands(jax.random.PRNGKey(0), 1, 16, 9)
+    g = jnp.ones((1, 2))
+    with pytest.raises(ValueError, match="not divisible"):
+        ops.gated_rglru_scan(la, b, g, g, chunk=8, interpret=True)
+
+
+def test_moe_bwd_gt_fwd_slots_rejected():
+    xb, wu, wg, wd, _ = _moe_operands(jax.random.PRNGKey(0), 2, 16, 4, 8)
+    fs = jnp.zeros((2, 16))
+    bs = jnp.ones((2, 16))
+    with pytest.raises(ValueError, match="bwd_slots <= fwd_slots"):
+        ops.gated_moe_ffn(xb, wu, wg, wd, fs, bs, interpret=True)
+
+
+def test_moe_undersized_live_slots_rejected():
+    xb, wu, wg, wd, _ = _moe_operands(jax.random.PRNGKey(0), 2, 16, 4, 8)
+    fs = jnp.ones((2, 16))
+    with pytest.raises(ValueError, match="live_slots=4 is below"):
+        ops.gated_moe_ffn(xb, wu, wg, wd, fs, fs, live_slots=4,
+                          interpret=True)
+
+
+# ============================== executed work == schedule bounds (hypothesis)
+def _sched_gates(ops_flat, B, G, M):
+    """A 1-layer Schedule from raw op codes -> gates + live_slice_bounds.
+
+    ops_flat codes 0/1/2 map to the table encoding P_F/P_O/P_S (1/2/3)."""
+    table = (np.asarray(ops_flat, np.int8) + 1).reshape(G, M)
+    sched = Schedule(table, 1, G)
+    mb_of = microbatch_assignment(B, M)
+    g_f, g_b = gates_from_schedule(sched, mb_of)
+    return g_f[0], g_b[0], live_slice_bounds(sched, mb_of)
+
+
+@given(st.lists(st.integers(0, 2), min_size=8, max_size=8))
+@settings(max_examples=10, deadline=None)
+def test_ssd_executed_blocks_match_live_slice_bounds(ops_flat):
+    """Grid leading dims equal the contract's dispatch_count of the
+    schedule bounds; executed backward blocks equal live_bwd x chunks."""
+    B, G, M, S, P, N, chunk = 4, 2, 4, 32, 4, 4, 8
+    g_f, g_b, bounds = _sched_gates(ops_flat, B, G, M)
+    n_live_b = int(np.sum(np.asarray(g_b) != 0))
+    assert n_live_b <= bounds[1]
+    x, da, Bm, Cm, do = _ssd_operands(jax.random.PRNGKey(7), B, S, G, P, N)
+
+    grids, count = {}, {"n": 0}
+    d2s.on_dispatch = lambda kind, grid: grids.__setitem__(kind, grid)
+    d2s.on_backward_block = lambda: count.__setitem__("n", count["n"] + 1)
+    jax.clear_caches()                       # hooks are read at trace time
+    try:
+        out, vjp = jax.vjp(
+            lambda x: ops.gated_ssd_scan(
+                x, da, Bm, Cm, g_f, g_b, chunk=chunk, interpret=True,
+                live_fwd=bounds[0], live_bwd=bounds[1]), x)
+        vjp(do)
+        jax.effects_barrier()
+    finally:
+        d2s.on_dispatch = None
+        d2s.on_backward_block = None
+
+    nc = S // chunk
+    assert grids["fwd"][0] == contract.dispatch_count(bounds[0], B * G)
+    assert grids["bwd"][0] == contract.dispatch_count(bounds[1], B * G)
+    assert count["n"] == n_live_b * nc
+
+
+@given(st.lists(st.integers(0, 2), min_size=8, max_size=8))
+@settings(max_examples=10, deadline=None)
+def test_rglru_executed_blocks_match_live_slice_bounds(ops_flat):
+    B, G, M, S, W, chunk = 4, 2, 4, 32, 16, 8
+    g_f, g_b, bounds = _sched_gates(ops_flat, B, G, M)
+    n_live_b = int(np.sum(np.asarray(g_b) != 0))
+    la, b, do = _rglru_operands(jax.random.PRNGKey(8), B, S, W)
+
+    grids, count = {}, {"n": 0}
+    d2r.on_dispatch = lambda kind, grid: grids.__setitem__(kind, grid)
+    d2r.on_backward_block = lambda: count.__setitem__("n", count["n"] + 1)
+    jax.clear_caches()
+    try:
+        out, vjp = jax.vjp(
+            lambda la, b: ops.gated_rglru_scan(
+                la, b, g_f, g_b, chunk=chunk, interpret=True,
+                live_fwd=bounds[0], live_bwd=bounds[1]), la, b)
+        vjp(do)
+        jax.effects_barrier()
+    finally:
+        d2r.on_dispatch = None
+        d2r.on_backward_block = None
+
+    nc = S // chunk
+    assert grids["fwd"][0] == contract.dispatch_count(bounds[0], B * G)
+    assert grids["bwd"][0] == contract.dispatch_count(bounds[1], B * G)
+    assert count["n"] == n_live_b * nc
+
+
+@given(st.lists(st.integers(0, 2), min_size=8, max_size=8))
+@settings(max_examples=10, deadline=None)
+def test_moe_executed_blocks_match_block_masks(ops_flat):
+    """Executed backward tiles equal the number of backward-live capacity
+    blocks; live_slots truncation shrinks the dispatched grid."""
+    E, C, D, F, bc = 2, 32, 4, 8, 8
+    ops_ = np.asarray(ops_flat).reshape(2, 4)    # op per (expert, block)
+    fs = np.repeat((ops_ != 2).astype(np.float32), bc, axis=1)
+    bs = np.repeat((ops_ == 0).astype(np.float32), bc, axis=1)
+    n_bwd_blocks = int((ops_ == 0).sum())
+    xb, wu, wg, wd, do = _moe_operands(jax.random.PRNGKey(9), E, C, D, F)
+
+    grids, count = {}, {"n": 0}
+    d2m.on_dispatch = lambda kind, grid: grids.__setitem__(kind, grid)
+    d2m.on_backward_block = lambda: count.__setitem__("n", count["n"] + 1)
+    jax.clear_caches()
+    try:
+        out, vjp = jax.vjp(
+            lambda xb: ops.gated_moe_ffn(
+                xb, wu, wg, wd, jnp.asarray(fs), jnp.asarray(bs),
+                block_c=bc, interpret=True), xb)
+        vjp(do)
+        jax.effects_barrier()
+    finally:
+        d2m.on_dispatch = None
+        d2m.on_backward_block = None
+
+    assert grids["fwd"] == (E, C // bc)
+    assert grids["bwd"] == (E, C // bc)
+    assert count["n"] == n_bwd_blocks
+
+
+def test_moe_live_slots_truncates_grid():
+    E, C, D, F, bc = 2, 64, 4, 8, 16
+    xb, wu, wg, wd, _ = _moe_operands(jax.random.PRNGKey(10), E, C, D, F)
+    fs = np.zeros((E, C), np.float32)
+    fs[:, :24] = 1.0                              # occupancy in first 24 slots
+    grids = {}
+    d2m.on_dispatch = lambda kind, grid: grids.__setitem__(kind, grid)
+    jax.clear_caches()
+    try:
+        ops.gated_moe_ffn(xb, wu, wg, wd, jnp.asarray(fs), block_c=bc,
+                          live_slots=24, interpret=True)
+    finally:
+        d2m.on_dispatch = None
+    # 24 live slots -> ceil(24/16) = 2 of 4 capacity blocks dispatched
+    assert grids["fwd"] == (E, 2)

@@ -1,0 +1,87 @@
+"""Config-zoo kernel coverage: every architecture in the zoo must complete
+one ``use_kernel=True`` gated train step with NO silent fallback to a
+masked / dense route.
+
+The gated block kernel contract (kernels/contract.py) requires every
+non-kernel route taken while ``use_kernel=True`` to announce itself via
+``contract.report_fallback(kind, reason)``. This test arms the
+``on_fallback`` hook across the whole zoo — attention, SSD, RG-LRU and
+MoE blocks alike — and fails loudly listing the un-kerneled block types,
+so a new architecture (or a head-grouping change that breaks H % G == 0)
+cannot quietly regress to the masked path while appearing kernel-covered.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.core.schedule import P_F, P_O, P_S, Schedule, gates_from_schedule
+from repro.data.synthetic import microbatch_assignment
+from repro.kernels import contract
+from repro.models.frontends import synth_features
+from repro.models.transformer import init_model
+from repro.optim.optimizers import sgd
+from repro.train.loop import make_train_step
+
+G, N = 4, 2     # gate groups / micro-batches; every zoo smoke config has
+                # heads, SSD heads, LRU width and expert count divisible by 4
+
+
+def _batch(cfg, B, S):
+    key = jax.random.PRNGKey(7)
+    batch = {}
+    if cfg.frontend == "audio_stub":
+        batch["features"] = synth_features(key, cfg, B, S)
+        batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    elif cfg.frontend == "vision_stub":
+        s_text = S - cfg.frontend_tokens
+        batch["features"] = synth_features(key, cfg, B, S)
+        batch["tokens"] = jax.random.randint(key, (B, s_text), 0,
+                                             cfg.vocab_size)
+        batch["labels"] = jax.random.randint(key, (B, s_text), 0,
+                                             cfg.vocab_size)
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    return batch
+
+
+def _mixed_schedule(L):
+    """Every op type present so each kernel sees live, fwd-only and dead
+    slices in a single step."""
+    rng = np.random.default_rng(11)
+    table = rng.choice([P_F, P_O, P_S], size=(L * G, N),
+                       p=[.4, .3, .3]).astype(np.int8)
+    table[0, 0] = P_F                  # at least one live backward slice
+    return Schedule(table, L, G)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_zoo_kernel_train_step_no_silent_fallback(arch):
+    cfg = get_smoke_config(arch)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 16
+    batch = _batch(cfg, B, S)
+    sched = _mixed_schedule(cfg.n_layers)
+    gates = gates_from_schedule(sched, microbatch_assignment(B, N))
+
+    fallbacks = []
+    contract.on_fallback = lambda kind, reason: fallbacks.append(
+        (kind, reason))
+    try:
+        opt = sgd(1e-2)
+        step = jax.jit(make_train_step(cfg, opt, use_gates=True,
+                                       use_kernel=True))
+        p2, _, metrics = step(params, opt.init(params), batch, gates)
+        jax.block_until_ready(p2)
+    finally:
+        contract.on_fallback = None
+
+    kinds = sorted({k for k, _ in fallbacks})
+    assert not fallbacks, (
+        f"{arch}: use_kernel=True silently fell back for block types "
+        f"{kinds}: {fallbacks[:4]}")
+    assert np.isfinite(float(metrics["loss"])), arch
+    leaf = jax.tree.leaves(p2)[0]
+    assert bool(jnp.all(jnp.isfinite(leaf))), arch
