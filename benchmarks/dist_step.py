@@ -71,6 +71,16 @@ def main():
           f"n_all_gather_ops={z3['n_all_gather_ops']};"
           f"opt_memory_fraction={z3['opt_memory_fraction']:.4f};"
           f"residency_target<=0.50")
+    ov = rec["overlap"]
+    print(f"overlap,0.0,"
+          f"exposed_collective_fraction="
+          f"{ov['exposed_collective_fraction']:.3f};"
+          f"streamed_residency_fraction="
+          f"{ov['streamed_residency_fraction']:.4f};"
+          f"peak_agreement={ov['peak_agreement']:.4f};"
+          f"double_buffer_fraction={ov['double_buffer_fraction']:.3f};"
+          f"wire_ratio_vs_unstreamed={ov['wire_ratio_vs_unstreamed']:.4f};"
+          f"exposed_target<1.0")
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=2)
     print(f"# wrote {args.out}", file=sys.stderr)

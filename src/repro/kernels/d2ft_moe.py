@@ -23,7 +23,11 @@ The masks are per (expert, capacity-block) in {0, 1} with bwd <= fwd and
 receive zero cotangents. The analogue of compaction dispatch is *static
 capacity truncation*: the wrapper (``ops.gated_moe_ffn``) shrinks the
 capacity axis to the schedule-derived live-slot bound before launching,
-so provably-empty trailing blocks cost neither grid steps nor DMA.
+so provably-empty trailing blocks cost neither grid steps nor DMA. The
+two passes truncate independently — the forward to the g_f bound, the
+backward to the (smaller or equal) g_b bound via the ``bwd_blocks``
+nondiff argument, which works because the dispatch sorts backward-live
+assignments into a capacity prefix per expert.
 
 The jit'd public wrapper with interpret auto-detection is
 ``repro.kernels.ops.gated_moe_ffn``; the pure-jnp oracle is
@@ -33,6 +37,7 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import numpy as np
 
@@ -207,33 +212,57 @@ def _backward(xb, w_up, w_gate, w_down, bm, dy, *, act: str, block_c: int,
 
 
 # =============================================================== custom VJP
-@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
 def gated_moe_ffn(xb, w_up, w_gate, w_down, fm, bm, act, block_c,
-                  interpret):
+                  bwd_blocks, interpret):
     """Differentiable doubly-sparse MoE expert FFN core.
 
     xb: [E, C, D] capacity buffer (front-packed live tokens — see
     models/moe.py), w_up/w_gate: [E, D, F], w_down: [E, F, D], fm/bm:
     [E, C // block_c] float {0,1} per-(expert, capacity-block) masks with
     bm <= fm. Forward skips fm == 0 tiles; backward skips bm == 0 tiles
-    and returns zero gradients there (masks get zero cotangents). C must
-    be a multiple of block_c (the wrapper pads + truncates). Prefer
+    and returns zero gradients there (masks get zero cotangents).
+    bwd_blocks: static capacity-block count for the backward grid, keyed
+    on the g_b bound *separately* from the forward's truncation — the
+    dispatch packs backward-live slots into a capacity prefix per expert
+    (models/moe.py sorts p_f assignments before p_o), so when g_b < g_f
+    every bm bit beyond the first ``bwd_blocks`` blocks is zero and the
+    backward launches a (E, bwd_blocks) grid over sliced operands instead
+    of re-walking the forward's capacity; dx zero-pads back to C. Pass
+    ``None`` (or >= C // block_c) for the full grid. C must be a multiple
+    of block_c (the wrapper pads + truncates). Prefer
     ``ops.gated_moe_ffn``.
     """
     return _forward(xb, w_up, w_gate, w_down, fm, act=act, block_c=block_c,
                     interpret=interpret)
 
 
-def _vjp_fwd(xb, w_up, w_gate, w_down, fm, bm, act, block_c, interpret):
+def _vjp_fwd(xb, w_up, w_gate, w_down, fm, bm, act, block_c, bwd_blocks,
+             interpret):
     y = _forward(xb, w_up, w_gate, w_down, fm, act=act, block_c=block_c,
                  interpret=interpret)
     return y, (xb, w_up, w_gate, w_down, fm, bm)
 
 
-def _vjp_bwd(act, block_c, interpret, res, dy):
+def _vjp_bwd(act, block_c, bwd_blocks, interpret, res, dy):
     xb, w_up, w_gate, w_down, fm, bm = res
-    dx, dwu, dwg, dwd = _backward(xb, w_up, w_gate, w_down, bm, dy, act=act,
-                                  block_c=block_c, interpret=interpret)
+    E, C, _ = xb.shape
+    n_cb = C // block_c
+    nb = n_cb if bwd_blocks is None else min(int(bwd_blocks), n_cb)
+    if nb < n_cb:
+        # backward-live slots are front-packed: the truncated tail holds
+        # only bm == 0 blocks, whose dx is zero and whose dW tiles are
+        # @pl.when-skipped anyway — slicing them off the grid makes the
+        # backward's steps and DMA scale with g_b, not g_f.
+        cr = nb * block_c
+        dx, dwu, dwg, dwd = _backward(
+            xb[:, :cr], w_up, w_gate, w_down, bm[:, :nb], dy[:, :cr],
+            act=act, block_c=block_c, interpret=interpret)
+        dx = jnp.pad(dx, ((0, 0), (0, C - cr), (0, 0)))
+    else:
+        dx, dwu, dwg, dwd = _backward(xb, w_up, w_gate, w_down, bm, dy,
+                                      act=act, block_c=block_c,
+                                      interpret=interpret)
     return (dx.astype(xb.dtype), dwu.astype(w_up.dtype),
             dwg.astype(w_gate.dtype), dwd.astype(w_down.dtype),
             jnp.zeros_like(fm), jnp.zeros_like(bm))
@@ -256,14 +285,17 @@ def gated_moe_flops(fm, bm, block_c: int, D: int, F: int):
 
 
 def gated_moe_dispatched_bytes(E: int, n_cb: int, block_c: int, D: int,
-                               F: int, *, itemsize: int = 4):
+                               F: int, *, itemsize: int = 4,
+                               n_cb_bwd: Optional[int] = None):
     """(fwd_bytes, bwd_bytes) streamed for grids of (E, n_cb): expert
     weights fetch once per expert (their index maps ignore the capacity
     dim), x/y/dy/dx once per tile, dW written once per expert. Capacity
     truncation (the wrapper's n_cb) is what shrinks this — ``@pl.when``
-    alone does not."""
+    alone does not. ``n_cb_bwd`` prices the backward's separate g_b-keyed
+    truncation (defaults to the shared grid)."""
+    nb = n_cb if n_cb_bwd is None else n_cb_bwd
     wb = 3 * D * F * itemsize
     tile = block_c * D * itemsize
     fwd = E * (wb + n_cb * 2 * tile)               # x read + y written
-    bwd = E * (wb + n_cb * 3 * tile + wb)          # x, dy read; dx, dW out
+    bwd = E * (wb + nb * 3 * tile + wb)            # x, dy read; dx, dW out
     return fwd, bwd

@@ -222,9 +222,9 @@ def gated_rglru_scan(la, b, g_f, g_b=None, *, chunk: int = 128,
 
 # ------------------------------------------------------------ gated MoE FFN
 @functools.partial(jax.jit, static_argnames=("act", "block_c", "live_slots",
-                                             "interpret"))
+                                             "live_bwd_slots", "interpret"))
 def _gated_moe_impl(xb, w_up, w_gate, w_down, fwd_slots, bwd_slots, *, act,
-                    block_c, live_slots, interpret):
+                    block_c, live_slots, live_bwd_slots, interpret):
     E, C, D = xb.shape
     bc = min(block_c, C)
     Cp = -(-C // bc) * bc
@@ -233,6 +233,12 @@ def _gated_moe_impl(xb, w_up, w_gate, w_down, fwd_slots, bwd_slots, *, act,
     # live-slot bound are provably empty — don't launch or stream them
     if live_slots is not None and live_slots < Cp:
         n_cb = min(n_cb, -(-max(1, int(live_slots)) // bc))
+    # the backward truncates independently, on the g_b bound: the dispatch
+    # packs backward-live slots into a capacity prefix per expert, so a
+    # g_b < g_f mix shrinks the backward grid below the forward's
+    n_cb_b = n_cb
+    if live_bwd_slots is not None:
+        n_cb_b = min(n_cb, -(-max(1, int(live_bwd_slots)) // bc))
     Cr = n_cb * bc
     pad = ((0, 0), (0, max(0, Cr - C)))
     xs = jnp.pad(xb, pad + ((0, 0),))[:, :Cr]
@@ -241,7 +247,7 @@ def _gated_moe_impl(xb, w_up, w_gate, w_down, fwd_slots, bwd_slots, *, act,
     fm = (fm.sum(-1) > 0).astype(jnp.float32)
     bm = (bm.sum(-1) > 0).astype(jnp.float32)
     y = _moe.gated_moe_ffn(xs, w_up, w_gate, w_down, fm, bm, act, bc,
-                           _auto_interpret(interpret))
+                           n_cb_b, _auto_interpret(interpret))
     if Cr < C:
         y = jnp.pad(y, ((0, 0), (0, C - Cr), (0, 0)))
     return y[:, :C]
@@ -250,6 +256,7 @@ def _gated_moe_impl(xb, w_up, w_gate, w_down, fwd_slots, bwd_slots, *, act,
 def gated_moe_ffn(xb, w_up, w_gate, w_down, fwd_slots, bwd_slots=None, *,
                   act: str = "silu", block_c: int = 128,
                   live_slots: Optional[int] = None,
+                  live_bwd_slots: Optional[int] = None,
                   interpret: Optional[bool] = None):
     """Doubly-sparse MoE expert FFN over a capacity buffer (custom VJP).
 
@@ -262,7 +269,13 @@ def gated_moe_ffn(xb, w_up, w_gate, w_down, fwd_slots, bwd_slots=None, *,
     (``@pl.when`` skip otherwise). ``live_slots`` is a static upper bound
     on live slots per expert (schedule live-sample bound x top_k): blocks
     beyond it are truncated from the grid entirely — the MoE analogue of
-    compaction dispatch. Omitting bwd_slots uses bwd = fwd.
+    compaction dispatch. ``live_bwd_slots`` bounds the *backward-live*
+    slots separately (g_b bound x top_k): the dispatch packs p_f slots
+    into a capacity prefix per expert, so the backward grid truncates to
+    this smaller bound even when the forward must cover every p_o slot.
+    Omitting it shares the forward's bound (every backward-live slot is
+    forward-live, so ``live_slots`` always covers it). Omitting bwd_slots
+    uses bwd = fwd.
     """
     if bwd_slots is None:
         bwd_slots = fwd_slots
@@ -284,8 +297,18 @@ def gated_moe_ffn(xb, w_up, w_gate, w_down, fwd_slots, bwd_slots=None, *,
                     f"live_slots={live_slots} is below the highest occupied "
                     f"slot {top}: the capacity-truncation bound must cover "
                     "every live slot or their outputs would be zeroed")
+        if live_bwd_slots is not None:
+            occ_b = np.argwhere(cb != 0)
+            top_b = int(occ_b[:, 1].max()) + 1 if occ_b.size else 0
+            if live_bwd_slots < top_b:
+                raise ValueError(
+                    f"live_bwd_slots={live_bwd_slots} is below the highest "
+                    f"occupied backward slot {top_b}: the backward "
+                    "truncation bound must cover every backward-live slot "
+                    "or their gradients would be zeroed")
     return _gated_moe_impl(xb, w_up, w_gate, w_down, fwd_slots, bwd_slots,
                            act=act, block_c=block_c, live_slots=live_slots,
+                           live_bwd_slots=live_bwd_slots,
                            interpret=interpret)
 
 

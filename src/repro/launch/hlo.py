@@ -98,6 +98,22 @@ def collective_bytes(hlo_text: str,
     return dict(out)
 
 
+def compare_collective_bytes(hlo_a: str, hlo_b: str, *,
+                             default_group_size: int = 2) -> Dict[str, float]:
+    """Total per-device collective bytes of two lowerings and their ratio.
+
+    The wire-invariance check for streamed ZeRO-3: splitting one big param
+    all-gather into per-unit (or per-cycle) gathers must not change the
+    totals — every ring formula above is linear in the payload bytes — so
+    the streamed/unstreamed ratio must be ~1.0 regardless of how the
+    collectives are scheduled against compute."""
+    a = collective_bytes(hlo_a, default_group_size)
+    b = collective_bytes(hlo_b, default_group_size)
+    ta, tb = float(sum(a.values())), float(sum(b.values()))
+    return {"a_bytes": ta, "b_bytes": tb,
+            "ratio": ta / tb if tb else (1.0 if not ta else float("inf"))}
+
+
 def collective_counts(hlo_text: str) -> Dict[str, int]:
     """Instruction counts by collective type (async pairs count once, at
     ``-done``). Lets a test assert a lowering *contains* the expected ops

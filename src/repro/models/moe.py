@@ -43,6 +43,7 @@ def apply_moe(params, x, cfg: MoEConfig, act: str = "silu",
               gates: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
               use_kernel: bool = False,
               live_tokens: Optional[int] = None,
+              live_bwd_tokens: Optional[int] = None,
               block_c: int = 128):
     """x: [B, S, d]. Returns (y, aux) where aux has load-balance/z losses.
 
@@ -57,6 +58,10 @@ def apply_moe(params, x, cfg: MoEConfig, act: str = "silu",
     slot-occupancy masks; ``live_tokens`` is the schedule's static upper
     bound on forward-live tokens (live samples x S), bounding live capacity
     slots at ``live_tokens * top_k`` for compaction-style block truncation.
+    ``live_bwd_tokens`` is the matching *backward*-live bound (g_b samples
+    x S): because bwd-live assignments pack first per expert segment, it
+    truncates the kernel's backward grid separately — a g_b < g_f mix
+    stops dispatching capacity blocks that only hold p_o slots.
     """
     B, S, D = x.shape
     T = B * S
@@ -115,10 +120,12 @@ def apply_moe(params, x, cfg: MoEConfig, act: str = "silu",
         bwd_slots = bwd_slots.at[e_s, pos_c].add(keep_b)[:, :capacity]
         live_slots = (min(capacity, int(live_tokens) * K)
                       if live_tokens is not None else None)
+        live_bwd_slots = (min(capacity, int(live_bwd_tokens) * K)
+                          if live_bwd_tokens is not None else None)
         out_e = kernel_ops.gated_moe_ffn(
             buf, params["w_up"], params["w_gate"], params["w_down"],
             fwd_slots, bwd_slots, act=act, block_c=block_c,
-            live_slots=live_slots)
+            live_slots=live_slots, live_bwd_slots=live_bwd_slots)
         out_e = out_e.astype(x.dtype)
     else:
         h = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])

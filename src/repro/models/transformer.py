@@ -178,19 +178,23 @@ def _apply_ffn(p, h, cfg: ModelConfig, layer_gates, policy,
                 kernel_contract.report_fallback(
                     "moe", "sharded policy path has no kernel route")
             moe_gates = None
-            live_toks = None
+            live_toks = bwd_toks = None
             if layer_gates is not None:
                 g_f, g_b = layer_gates
                 # MoE is one D2FT group (G position 0): per-sample gates
                 moe_gates = (g_f[:, 0], g_b[:, 0])
                 if live_bounds is not None:
                     live_toks = min(h.shape[0], live_bounds[0]) * h.shape[1]
+                    # separate g_b bound: backward-live slots pack into a
+                    # capacity prefix, so the kernel backward truncates to
+                    # this even when the forward covers every p_o slot
+                    bwd_toks = min(h.shape[0], live_bounds[1]) * h.shape[1]
             y, aux = moe_mod.apply_moe(
                 p["moe"], h, cfg.moe, act=cfg.mlp_act,
                 shard_fn=policy.moe if policy is not None else None,
                 gates=moe_gates,
                 use_kernel=use_kernel and policy is None,
-                live_tokens=live_toks)
+                live_tokens=live_toks, live_bwd_tokens=bwd_toks)
         if layer_gates is not None:
             g_f, g_b = layer_gates
             y = gate_mix(y[:, :, None, :], g_f[:, :1], g_b[:, :1])[:, :, 0]

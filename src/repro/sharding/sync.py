@@ -85,8 +85,25 @@ source of truth and is always updated, weight decay included.
 ``zero3_param_byte_report`` prices the residency-window memory model:
 persistent bytes (owned shards + replicated fallback leaves) plus the
 largest transiently materialized unit (one transformer block, or one
-loss-path subtree) under the gather mask. See docs/distributed.md for
-what the model does and does not claim about the CPU emulation.
+loss-path subtree) under the gather mask.
+
+Streamed execution
+------------------
+``zero3_stream_materialize`` is the execution the residency model prices:
+each residency unit (one cycle of one pattern position, one ``rest``
+block, one loss-path subtree) is materialized by its own per-unit
+all-gathers, and every leaf's reduce-scatter is fused into the
+materialization's ``custom_vjp`` — the scatter is emitted exactly where
+the backward releases that unit's gradient instead of in a serialized
+post-backward pass. Values and wire bytes are identical to
+``zero3_materialize`` + ``apply_zero_scatter`` (same collectives on the
+same operands, split per unit); what changes is the *schedule*: XLA is
+free to overlap unit i+1's gathers with unit i's compute and to free each
+unit's views as its backward retires. A ``ResidencyRecorder`` passed to
+the streamed materializer counts the gathered bytes of every unit at
+trace time, and ``check_zero3_residency`` fails if that measurement
+disagrees with ``zero3_param_byte_report``'s model beyond tolerance —
+``per_device_peak_bytes`` is a measurement, not a promise.
 """
 from __future__ import annotations
 
@@ -672,6 +689,132 @@ def zero_param_specs(plan, axis_name: str):
     return _map_zero(leaf, [], plan)
 
 
+# ------------------------------------------------ streamed materialization
+class ResidencyRecorder:
+    """Trace-time counter of the bytes each residency unit all-gathers.
+
+    The streamed materializer reports every gather site it emits as
+    ``record(unit, site, nbytes)``; sites are keyed (not summed) so
+    re-tracing the same step is idempotent. ``unit_bytes()`` is the
+    *measured* side of the residency model — ``check_zero3_residency``
+    compares it against ``zero3_param_byte_report``."""
+
+    def __init__(self):
+        self.sites: dict = {}            # unit -> {site_key: bytes}
+
+    def record(self, unit: str, site: str, nbytes: float):
+        self.sites.setdefault(unit, {})[site] = float(nbytes)
+
+    def unit_bytes(self) -> dict:
+        return {u: float(sum(s.values())) for u, s in self.sites.items()}
+
+
+def _cycle_spec(spec: SyncSpec, c: int) -> SyncSpec:
+    """Spec for cycle c of a scan-stacked leaf (the uniform stacked forms
+    carry the cycle dim in ``axis``; unstacking shifts it back)."""
+    if spec.mode in ("zero_stacked", "stacked"):
+        return spec.per_cycle[c]
+    if spec.mode == "zero":
+        return SyncSpec("zero", axis=spec.axis - 1, live=spec.live,
+                        gather=spec.gather, shards=spec.shards)
+    if spec.mode == "sliced":
+        return SyncSpec("sliced", axis=spec.axis - 1, live=spec.live)
+    return spec                          # all / none: per-cycle unchanged
+
+
+def _stream_leaf(shard, spec: SyncSpec, axis_name: str, recorder=None,
+                 unit: str = "", path: str = ""):
+    """One leaf of the streamed schedule: forward all-gather and backward
+    reduce-scatter fused into a ``custom_vjp``, so the scatter sits exactly
+    where the backward releases this leaf's gradient. Fallback (masked)
+    leaves stream too: identity forward, masked pmean in the vjp. Values
+    match ``zero3_materialize`` + ``apply_zero_scatter`` bit-for-bit —
+    the ``dist_zero3_streamed`` parity arm pins that."""
+    if recorder is not None and _is_zero(spec):
+        full_ax = shard.shape[spec.axis] * spec.shards
+        gs = full_ax // len(spec.live)
+        row = float(np.prod(shard.shape)) / shard.shape[spec.axis] \
+            * np.dtype(shard.dtype).itemsize
+        for _, gather, s, e in _zero_runs(spec):
+            if gather:
+                recorder.record(unit, f"{path}[{s}:{e}]",
+                                (e - s) * gs * row)
+
+    @jax.custom_vjp
+    def mat(s):
+        return _zero3_materialize_leaf(s, spec, axis_name)
+
+    def mat_fwd(s):
+        return _zero3_materialize_leaf(s, spec, axis_name), None
+
+    def mat_bwd(_, ct):
+        return (_zero_scatter_leaf(ct, spec, axis_name),)
+
+    mat.defvjp(mat_fwd, mat_bwd)
+    return mat(shard)
+
+
+def _stream_block(tree, plan_t, axis_name: str, recorder, unit: str,
+                  path: str = ""):
+    if isinstance(plan_t, SyncSpec):
+        return _stream_leaf(tree, plan_t, axis_name, recorder, unit, path)
+    if isinstance(plan_t, dict):
+        return {k: _stream_block(tree[k], plan_t[k], axis_name, recorder,
+                                 unit, f"{path}/{k}") for k in plan_t}
+    return [_stream_block(tree[i], p, axis_name, recorder, unit,
+                          f"{path}/{i}") for i, p in enumerate(plan_t)]
+
+
+def _stream_block_stacked(tree, plan_t, axis_name: str, recorder,
+                          unit_prefix: str, path: str = ""):
+    """Scan-stacked block: each cycle is its own residency unit, so every
+    leaf is unstacked and materialized per cycle (one gather per cycle per
+    run instead of one spanning the stack — same bytes, unit-granular
+    scheduling) and re-stacked for the scan."""
+    if isinstance(plan_t, SyncSpec):
+        n_cycles = tree.shape[0]
+        return jnp.stack([
+            _stream_leaf(tree[c], _cycle_spec(plan_t, c), axis_name,
+                         recorder, f"{unit_prefix}[{c}]", path)
+            for c in range(n_cycles)])
+    if isinstance(plan_t, dict):
+        return {k: _stream_block_stacked(tree[k], plan_t[k], axis_name,
+                                         recorder, unit_prefix,
+                                         f"{path}/{k}") for k in plan_t}
+    return [_stream_block_stacked(tree[i], p, axis_name, recorder,
+                                  unit_prefix, f"{path}/{i}")
+            for i, p in enumerate(plan_t)]
+
+
+def zero3_stream_materialize(params, plan, axis_name: str, *,
+                             recorder: Optional[ResidencyRecorder] = None):
+    """Sharded params tree -> full views, one residency unit at a time.
+
+    Drop-in replacement for ``zero3_materialize`` whose gradient is
+    already the scattered mixed tree of ``apply_zero_scatter`` — take
+    ``jax.grad`` of a loss over this and the reduce-scatters land at each
+    unit's backward release point, with per-unit all-gathers the XLA
+    scheduler can prefetch (double-buffer) against the previous unit's
+    compute. Must run inside shard_map. ``recorder`` (optional) counts
+    every gather site's bytes per unit at trace time."""
+    out = {}
+    for key in params:
+        if key == "cycles":
+            out[key] = [
+                _stream_block_stacked(params[key][i], plan[key][i],
+                                      axis_name, recorder, f"cycles[{i}]")
+                for i in range(len(plan[key]))]
+        elif key == "rest":
+            out[key] = [
+                _stream_block(params[key][i], plan[key][i], axis_name,
+                              recorder, f"rest[{i}]")
+                for i in range(len(plan[key]))]
+        else:
+            out[key] = _stream_block(params[key], plan[key], axis_name,
+                                     recorder, key)
+    return out
+
+
 # --------------------------------------------------------------- accounting
 def _mask_fraction(mask: Tuple[bool, ...]) -> float:
     return float(sum(mask)) / len(mask) if mask else 0.0
@@ -778,6 +921,20 @@ def _cycle_gather_fraction(spec: SyncSpec, c: int) -> Optional[float]:
     return None
 
 
+def _unit_gathered_bytes(tree, plan_t, cycle=None, n_cycles: int = 1):
+    """Gathered bytes of one residency unit (cycle slice or whole block)
+    under the plan's gather mask — the model side of what the streamed
+    materializer's ``ResidencyRecorder`` measures at trace time."""
+    u = 0.0
+    for p, spec in _plan_leaves(tree, plan_t):
+        if not _is_zero(spec):
+            continue
+        f = _cycle_gather_fraction(spec, 0 if cycle is None else cycle)
+        u += float(np.prod(p.shape)) * np.dtype(p.dtype).itemsize \
+            / n_cycles * f
+    return u
+
+
 def zero3_param_byte_report(plan, params, n_shards: int) -> dict:
     """Residency-window memory model of the ZeRO-3 partition.
 
@@ -787,12 +944,14 @@ def zero3_param_byte_report(plan, params, n_shards: int) -> dict:
     unit* — one transformer block (one cycle of one pattern position, or
     one ``rest`` block) or one loss-path subtree — under the plan's gather
     mask, with elided runs costing nothing (their zeros view folds into
-    the gated-off consumer). ``per_device_peak_bytes`` assumes the
-    streaming deployment schedule: one unit materialized at a time,
-    freed after use. The CPU-emulation step in this repo materializes all
-    gathered views inside one jit — the *wire* bytes and the elision are
-    measured there (HLO), the residency window is this model; see
-    docs/distributed.md.
+    the gated-off consumer). ``per_device_peak_bytes`` prices the
+    streaming schedule ``zero3_stream_materialize`` executes: one unit
+    materialized at a time, freed after its backward retires. The model is
+    cross-checked against that execution's trace-time gather counter by
+    ``check_zero3_residency`` (and the distributed-step bench fails if
+    they disagree beyond 5%); the double-buffered variant that also holds
+    the prefetched next unit is priced by the overlap model in
+    launch/diststep.py.
 
     ``fraction`` = peak / replicated is the ZeRO-3 memory claim;
     ``n_gather_elided`` counts runs whose all-gather the schedule killed
@@ -825,29 +984,7 @@ def zero3_param_byte_report(plan, params, n_shards: int) -> dict:
                     totals["n_gather_elided"] += 1
                     totals["elided_bytes"] += sub_size * frac
 
-    def unit(tree, plan_t, cycle=None, n_cycles=1):
-        u = 0.0
-        for p, spec in _plan_leaves(tree, plan_t):
-            if not _is_zero(spec):
-                continue
-            f = _cycle_gather_fraction(spec, 0 if cycle is None else cycle)
-            u += size_of(p) / n_cycles * f
-        return u
-
-    units = {}
-    for key, sub in plan.items():
-        if key == "cycles":
-            for i in range(len(sub)):
-                leaves = jax.tree.leaves(params[key][i])
-                n_cycles = leaves[0].shape[0] if leaves else 1
-                for c in range(n_cycles):
-                    units[f"cycles[{i}][{c}]"] = unit(
-                        params[key][i], sub[i], cycle=c, n_cycles=n_cycles)
-        elif key == "rest":
-            for i in range(len(sub)):
-                units[f"rest[{i}]"] = unit(params[key][i], sub[i])
-        else:
-            units[key] = unit(params[key], sub)
+    units = dict(zero3_unit_schedule(plan, params))
     totals["peak_unit_bytes"] = max(units.values()) if units else 0.0
     totals["peak_unit"] = max(units, key=units.get) if units else ""
     totals["per_device_peak_bytes"] = (totals["shard_bytes"]
@@ -858,6 +995,88 @@ def zero3_param_byte_report(plan, params, n_shards: int) -> dict:
                           if totals["replicated_bytes"] else 1.0)
     totals["n_shards"] = n_shards
     return totals
+
+
+# Loss-path subtrees consumed before the layer stack in the forward —
+# everything else non-block (final norm, unembed, ...) runs after it.
+_HEAD_KEYS = ("embed", "frontend_proj")
+
+
+def zero3_unit_schedule(plan, params):
+    """Ordered [(unit_name, gathered_bytes)] in forward execution order.
+
+    Head loss-path subtrees (embeddings) first, then the layer stack in
+    layer order — layer l = c * P + i is unit ``cycles[i][c]``, followed
+    by the ``rest`` blocks — then the remaining loss-path subtrees. This
+    is the unit sequence the streamed materializer gathers and the order
+    the overlap-window model (launch/diststep.py) prefetches in; names
+    match ``zero3_param_byte_report``'s units and the keys the
+    ``ResidencyRecorder`` measures."""
+    head, tail = [], []
+    for key in plan:
+        if key in ("cycles", "rest"):
+            continue
+        entry = (key, _unit_gathered_bytes(params[key], plan[key]))
+        (head if key in _HEAD_KEYS else tail).append(entry)
+    blocks = []
+    if "cycles" in plan and plan["cycles"]:
+        leaves = jax.tree.leaves(params["cycles"][0])
+        n_cycles = leaves[0].shape[0] if leaves else 1
+        for c in range(n_cycles):
+            for i in range(len(plan["cycles"])):
+                blocks.append((f"cycles[{i}][{c}]", _unit_gathered_bytes(
+                    params["cycles"][i], plan["cycles"][i], cycle=c,
+                    n_cycles=n_cycles)))
+    for i in range(len(plan.get("rest", []))):
+        blocks.append((f"rest[{i}]", _unit_gathered_bytes(
+            params["rest"][i], plan["rest"][i])))
+    return head + blocks + tail
+
+
+def check_zero3_residency(recorder: ResidencyRecorder, plan, params,
+                          n_shards: int, *, tol: float = 0.05) -> dict:
+    """Fail if the executed streaming schedule and the residency model
+    disagree beyond ``tol`` (relative).
+
+    ``recorder`` holds the gather bytes the streamed materializer actually
+    emitted (counted at trace time, per residency unit);
+    ``zero3_param_byte_report`` / ``zero3_unit_schedule`` hold what the
+    model promises. Every unit is compared, units the model does not know
+    about are an error, and the derived ``per_device_peak_bytes`` must
+    agree — the measurement contract the distributed-step bench and the
+    8-device parity suite enforce. Returns the measured-side summary for
+    the bench's ``overlap`` block."""
+    report = zero3_param_byte_report(plan, params, n_shards)
+    measured = recorder.unit_bytes()
+    model = dict(zero3_unit_schedule(plan, params))
+
+    def close(a, b):
+        return abs(a - b) <= tol * max(abs(a), abs(b), 1.0)
+
+    unknown = set(measured) - set(model)
+    assert not unknown, f"streamed schedule gathered unknown units {unknown}"
+    for name, want in model.items():
+        got = measured.get(name, 0.0)
+        assert close(got, want), \
+            f"unit {name}: measured {got:.0f}B vs model {want:.0f}B"
+    peak_meas = max(measured.values()) if measured else 0.0
+    assert close(peak_meas, report["peak_unit_bytes"]), \
+        (peak_meas, report["peak_unit_bytes"])
+    device_peak = (report["shard_bytes"] + report["fallback_bytes"]
+                   + peak_meas)
+    assert close(device_peak, report["per_device_peak_bytes"]), \
+        (device_peak, report["per_device_peak_bytes"])
+    return {
+        "measured_peak_unit_bytes": peak_meas,
+        "measured_peak_unit": (max(measured, key=measured.get)
+                               if measured else ""),
+        "measured_per_device_peak_bytes": device_peak,
+        "model_per_device_peak_bytes": report["per_device_peak_bytes"],
+        "peak_agreement": (device_peak / report["per_device_peak_bytes"]
+                           if report["per_device_peak_bytes"] else 1.0),
+        "n_units_measured": len(measured),
+        "n_units_model": len(model),
+    }
 
 
 # ----------------------------------------------- layout / state resharding

@@ -211,7 +211,9 @@ def make_distributed_train_step(cfg: ModelConfig, opt: Optimizer, mesh,
                                 use_kernel: bool = False, live_bounds=None,
                                 axis_name: str = "data",
                                 sync_mode: str = "masked", params=None,
-                                guard: bool = False, n_replicas=None):
+                                guard: bool = False, n_replicas=None,
+                                streamed: bool = False, opt_chunk=None,
+                                residency_recorder=None):
     """shard_map data-parallel gated train step (paper's *distributed* D2FT).
 
     Each device runs the masked/kernel gated path on its shard of the batch
@@ -241,6 +243,22 @@ def make_distributed_train_step(cfg: ModelConfig, opt: Optimizer, mesh,
       grads against the views, reduce-scatters live runs straight onto
       the owning shards (ZeRO-2), and updates shard-resident. Requires a
       ``grad_sync_plan(mode="zero3", ...)`` plan and ``params``.
+      ``streamed=True`` swaps in the per-residency-unit streamed schedule
+      (``sharding.sync.zero3_stream_materialize``): one set of all-gathers
+      per unit that the XLA scheduler can prefetch against the previous
+      unit's compute, and each unit's reduce-scatter fused into its
+      backward release point via ``custom_vjp`` instead of a serialized
+      post-backward pass. Same collectives on the same operands — the
+      ``dist_zero3_streamed`` parity arm pins value equality and the
+      8-device suite pins wire-byte equality. ``opt_chunk=n`` streams the
+      shard-resident update ``n`` elements at a time
+      (``optim.optimizers.chunked``, bit-identical);
+      ``residency_recorder`` (a ``sharding.sync.ResidencyRecorder``)
+      counts the streamed schedule's per-unit gather bytes at trace time
+      for the ``check_zero3_residency`` cross-check. Both options require
+      ``sync_mode="zero3"``, and ``streamed`` is incompatible with
+      ``guard`` (the guard must zero anomalous local grads *before* any
+      collective, which the vjp-embedded scatters make impossible).
 
     * ``"local"`` — the lo-fi communication-free mode: params and
       optimizer state arrive *per-replica stacked* ([n_replicas, ...]
@@ -277,10 +295,20 @@ def make_distributed_train_step(cfg: ModelConfig, opt: Optimizer, mesh,
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
+    from repro.optim.optimizers import chunked
     from repro.sharding.sync import (apply_grad_sync, apply_zero_gather,
                                      apply_zero_scatter, zero3_materialize,
-                                     zero_norm_sq, zero_param_specs,
-                                     zero_shard_params)
+                                     zero3_stream_materialize, zero_norm_sq,
+                                     zero_param_specs, zero_shard_params)
+
+    if streamed or opt_chunk:
+        assert sync_mode == "zero3", \
+            "streamed/opt_chunk require sync_mode='zero3'"
+    if streamed and guard:
+        raise ValueError("streamed ZeRO-3 cannot guard: the guard zeroes "
+                         "anomalous local grads before any collective, but "
+                         "the streamed reduce-scatters live inside the vjp")
+    upd_opt = chunked(opt, opt_chunk) if opt_chunk else opt
 
     def loss_of(params, batch, gates):
         def fn(p):
@@ -379,11 +407,37 @@ def make_distributed_train_step(cfg: ModelConfig, opt: Optimizer, mesh,
         # grads and params are both shard-resident at zero leaves: the
         # update never touches a full tensor and there is no post-update
         # gather — next step's materialization starts from the new shards.
-        new_params, new_state = opt.update(gsync, opt_state, params)
+        new_params, new_state = upd_opt.update(gsync, opt_state, params)
         metrics = dict(metrics, loss=loss, grad_norm=gnorm)
         if guard:
             return finish_guarded(params, opt_state, new_params, new_state,
                                   metrics, bad, n_bad_blocks)
+        return new_params, new_state, metrics
+
+    def local_step_zero3_streamed(params, opt_state, batch, gates):
+        # the streamed schedule: differentiate straight through the
+        # per-unit materializer, whose custom_vjp scatters each unit's
+        # grads onto the owning shards at that unit's backward release
+        # point — grads arrive here already in shard layout, with the
+        # gathers issued per unit so prefetch can hide them behind the
+        # previous unit's compute.
+        def fn(shards):
+            full = zero3_stream_materialize(shards, sync_plan, axis_name,
+                                            recorder=residency_recorder)
+            return lm_loss(full, cfg, batch.get("tokens"), batch["labels"],
+                           features=batch.get("features"), gates=gates,
+                           use_kernel=use_kernel, live_bounds=live_bounds)
+
+        (loss, metrics), gsync = jax.value_and_grad(
+            fn, has_aux=True)(params)
+        loss = jax.lax.pmean(loss, axis_name)
+        metrics = {k: jax.lax.pmean(v, axis_name) for k, v in metrics.items()}
+        shard_sq, full_sq = zero_norm_sq(gsync, sync_plan)
+        gnorm = jnp.sqrt(jax.lax.psum(shard_sq, axis_name) + full_sq)
+        scale = clip_scale(gnorm, clip)
+        gsync = jax.tree.map(lambda g: g * scale, gsync)
+        new_params, new_state = upd_opt.update(gsync, opt_state, params)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
         return new_params, new_state, metrics
 
     if sync_mode == "local":
@@ -448,7 +502,8 @@ def make_distributed_train_step(cfg: ModelConfig, opt: Optimizer, mesh,
             body = local_step_zero
         else:
             param_specs = zero_param_specs(sync_plan, axis_name)
-            body = local_step_zero3
+            body = local_step_zero3_streamed if streamed \
+                else local_step_zero3
     else:
         raise ValueError(f"unknown sync_mode {sync_mode!r}")
     in_specs = (param_specs, state_specs, P(axis_name),
@@ -485,6 +540,7 @@ def finetune_distributed(params, cfg: ModelConfig, d2: D2FTConfig,
                          mesh, use_kernel: bool = False, clip: float = 1.0,
                          sync_mode: str = "masked",
                          refresh_every: Optional[int] = None,
+                         streamed: bool = False, opt_chunk=None,
                          log: Optional[TrainLog] = None) -> tuple:
     """Distributed D2FT fine-tuning: plan, balance micro-batches over the
     mesh's data axis with the multiple-knapsack assigner, then drive the
@@ -503,7 +559,11 @@ def finetune_distributed(params, cfg: ModelConfig, d2: D2FTConfig,
     shards the params themselves: between steps every device holds only
     its owned shards, full views are materialized inside the step under
     the schedule's *forward* mask, and the per-refresh record gains the
-    ``zero3_params`` residency report. The returned params and opt_state
+    ``zero3_params`` residency report. ``streamed=True`` /
+    ``opt_chunk=n`` select the per-unit streamed schedule and the
+    chunk-streamed update (zero3 only; see
+    ``make_distributed_train_step``) — numerically identical, so replan,
+    reshard and checkpointing via ``zero_reshard`` are unchanged. The returned params and opt_state
     are in canonical element order regardless of sync_mode (the in-loop
     shard layout is converted back on return), so they checkpoint/resume
     on any path."""
@@ -595,7 +655,8 @@ def finetune_distributed(params, cfg: ModelConfig, d2: D2FTConfig,
             step_fn = make_distributed_train_step(
                 cfg, opt, mesh, sync_plan, clip=clip,
                 use_kernel=use_kernel, live_bounds=bounds,
-                sync_mode=sync_mode, params=params)
+                sync_mode=sync_mode, params=params,
+                streamed=streamed, opt_chunk=opt_chunk)
         t0 = time.perf_counter()
         params, opt_state, metrics = step_fn(params, opt_state, batch, gates)
         jax.block_until_ready(metrics["loss"])

@@ -151,6 +151,45 @@ for name, s, b, g in [("paper_mix", mix_sched, mix_batch, mix_gates),
         z3_elided = z3rep["n_gather_elided"]
         z3_residency = z3rep["fraction"]
 
+# ---- streamed ZeRO-3: per-unit gathers with the reduce-scatter fused into
+# each unit's backward release, plus the chunked shard-resident optimizer
+# sweep. Must walk the SAME trajectory as unstreamed zero3 and the masked
+# reference, carry identical collective bytes (overlap scheduling moves
+# collectives against compute, never adds or removes wire), and its
+# trace-time gather counter must agree with the residency model within 5%.
+from repro.launch.hlo import compare_collective_bytes
+from repro.sharding.sync import ResidencyRecorder, check_zero3_residency
+
+z3plan = grad_sync_plan(params, cfg, mix_sched, mode="zero3", n_shards=K)
+rec3 = ResidencyRecorder()
+sstep = make_distributed_train_step(cfg, opt, mesh, z3plan,
+                                    sync_mode="zero3", params=params,
+                                    streamed=True, opt_chunk=1024,
+                                    residency_recorder=rec3)
+ustep = make_distributed_train_step(cfg, opt, mesh, z3plan,
+                                    sync_mode="zero3", params=params)
+mref = jax.jit(make_train_step(cfg, opt, use_gates=True))
+p_s3, s_s3 = zero_reshard(params, None, z3plan), opt.init(params)
+p_u3, s_u3 = zero_reshard(params, None, z3plan), opt.init(params)
+p_m3, s_m3 = params, opt.init(params)
+for _ in range(3):
+    p_s3, s_s3, m_s3 = sstep(p_s3, s_s3, mix_batch, mix_gates)
+    p_u3, s_u3, m_u3 = ustep(p_u3, s_u3, mix_batch, mix_gates)
+    p_m3, s_m3, m_m3 = mref(p_m3, s_m3, mix_batch, mix_gates)
+sdiff = max_leaf_diff(p_s3, p_u3)            # both in shard layout
+assert sdiff <= 1e-6, f"streamed vs unstreamed zero3 diverged: {sdiff}"
+smdiff = max_leaf_diff(zero_reshard(p_s3, z3plan, None), p_m3)
+assert smdiff <= 1e-6, f"streamed zero3 vs masked reference: {smdiff}"
+assert abs(float(m_s3["loss"]) - float(m_m3["loss"])) <= 1e-5
+res3 = check_zero3_residency(rec3, z3plan, params, K)
+assert 0.95 <= res3["peak_agreement"] <= 1.05, res3
+args3 = (zero_reshard(params, None, z3plan), opt.init(params), mix_batch,
+         mix_gates)
+wire_cmp = compare_collective_bytes(
+    sstep.lower(*args3).compile().as_text(),
+    ustep.lower(*args3).compile().as_text(), default_group_size=K)
+assert 0.98 <= wire_cmp["ratio"] <= 1.02, wire_cmp
+
 # ---- comm accounting: schedule x sync-mode matrix vs all-p_f baseline
 rec = measure_distributed_step(K, time_steps=0)
 frac = rec["all_reduce_fraction"]
@@ -203,6 +242,19 @@ assert z3["residency_fraction"] <= 0.5, z3
 assert z3["paper_mix_wire_fraction"] <= 0.75, z3
 assert z3["opt_memory_fraction"] <= 1.0 / K + 0.05, z3
 
+# streamed acceptance: the bench's overlap block — some collectives hidden
+# behind compute, measured residency agrees with the model, wire bytes
+# invariant to the overlap scheduling, and the plan-derived sync_byte_report
+# is bit-identical between the streamed and unstreamed variants (it prices
+# the plan, not the schedule that executes it)
+ov = rec["overlap"]
+assert ov["exposed_collective_fraction"] < 1.0, ov
+assert 0.95 <= ov["peak_agreement"] <= 1.05, ov
+assert 0.98 <= ov["wire_ratio_vs_unstreamed"] <= 1.02, ov
+assert rec["variants"]["paper_mix_zero3_streamed"]["sync_plan"] == \
+    rec["variants"]["paper_mix_zero3"]["sync_plan"], \
+    "sync_byte_report must be invariant to overlap scheduling"
+
 print(f"PARITY_OK maxdiff={maxdiff:.3e} kernel_maxdiff={kdiff:.3e} "
       f"zero_maxdiff={zdiff:.3e} "
       f"all_reduce_fraction={frac:.4f} "
@@ -213,6 +265,10 @@ print(f"PARITY_OK maxdiff={maxdiff:.3e} kernel_maxdiff={kdiff:.3e} "
       f"zero3_wire={z3['paper_mix_wire_fraction']:.4f} "
       f"zero3_residency={z3_residency:.4f} "
       f"zero3_elided={z3_elided} "
+      f"streamed_maxdiff={sdiff:.3e} "
+      f"streamed_exposed={ov['exposed_collective_fraction']:.4f} "
+      f"streamed_peak_agreement={ov['peak_agreement']:.4f} "
+      f"streamed_wire_ratio={wire_cmp['ratio']:.4f} "
       f"byte_model_ratio_none={ps_ratio:.3f} "
       f"per_device_bounds={bounds[0]},{bounds[1]} "
       f"global_bounds={gbounds[0]},{gbounds[1]}")

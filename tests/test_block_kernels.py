@@ -419,3 +419,51 @@ def test_moe_live_slots_truncates_grid():
         d2m.on_dispatch = None
     # 24 live slots -> ceil(24/16) = 2 of 4 capacity blocks dispatched
     assert grids["fwd"] == (E, 2)
+
+
+def test_moe_live_bwd_slots_truncates_backward_grid():
+    """The backward capacity bound is keyed on g_b, independent of g_f:
+    with 40 forward-live but only 18 backward-live slots the forward
+    dispatches ceil(40/16) = 3 capacity blocks and the backward only
+    ceil(18/16) = 2 — and outputs and grads equal the untruncated path
+    exactly (slots past the bound are backward-dead: their dy contribution
+    is zero, so dropping their blocks changes nothing)."""
+    E, C, D, F, bc = 2, 64, 4, 8, 16
+    xb, wu, wg, wd, do = _moe_operands(jax.random.PRNGKey(11), E, C, D, F)
+    fs = np.zeros((E, C), np.float32)
+    fs[:, :40] = 1.0
+    bs = np.zeros((E, C), np.float32)
+    bs[:, :18] = 1.0                              # bwd-live prefix < fwd-live
+
+    def run(bwd_slots):
+        grids = {}
+        d2m.on_dispatch = lambda kind, grid: grids.__setitem__(kind, grid)
+        jax.clear_caches()
+        try:
+            out, vjp = jax.vjp(
+                lambda *w: ops.gated_moe_ffn(
+                    *w, jnp.asarray(fs), jnp.asarray(bs), block_c=bc,
+                    live_slots=40, live_bwd_slots=bwd_slots,
+                    interpret=True), xb, wu, wg, wd)
+            grads = vjp(do)
+            jax.effects_barrier()
+        finally:
+            d2m.on_dispatch = None
+        return out, grads, grids
+
+    out_t, g_t, grids_t = run(18)
+    out_f, g_f, grids_f = run(None)
+    assert grids_t["fwd"] == (E, 3)
+    assert grids_t["bwd"] == (E, 2)               # shrunk past the fwd bound
+    assert grids_f["fwd"] == (E, 3)
+    assert grids_f["bwd"] == (E, 3)               # untruncated: fwd bound
+    np.testing.assert_array_equal(np.asarray(out_t), np.asarray(out_f))
+    for a, b, n in zip(g_t, g_f, ("dx", "dwu", "dwg", "dwd")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0, atol=1e-6, err_msg=n)
+    # the bound must cover every backward-live slot — an undershoot would
+    # silently zero live grads, so it is rejected loudly
+    with pytest.raises(ValueError, match="backward"):
+        ops.gated_moe_ffn(xb, wu, wg, wd, jnp.asarray(fs), jnp.asarray(bs),
+                          block_c=bc, live_slots=40, live_bwd_slots=17,
+                          interpret=True)

@@ -425,6 +425,107 @@ def test_finetune_distributed_replans_per_refresh():
         assert diff <= 1e-6, (mode, diff)
 
 
+# ------------------------------------------------------- streamed ZeRO-3
+def test_zero3_unit_schedule_matches_report():
+    """The execution-ordered unit schedule is the report's unit set: names
+    unique, head subtrees first, totals and peak agree with
+    ``zero3_param_byte_report`` (the schedule is the model the streamed
+    materializer is checked against, so the two must never drift)."""
+    from repro.sharding.sync import zero3_unit_schedule
+    params = _params()
+    sched = paper_mix_schedule(L, G, N, (0.4, 0.3, 0.3), 0)
+    plan = grad_sync_plan(params, CFG, sched, mode="zero3", n_shards=8)
+    units = zero3_unit_schedule(plan, params)
+    rep = zero3_param_byte_report(plan, params, 8)
+    names = [n for n, _ in units]
+    assert len(names) == len(set(names))
+    assert names[0] == "embed", names
+    assert sum(b for _, b in units) == pytest.approx(rep["gathered_bytes"])
+    assert max(b for _, b in units) == pytest.approx(rep["peak_unit_bytes"])
+    assert dict(units)[rep["peak_unit"]] == pytest.approx(
+        rep["peak_unit_bytes"])
+    # blocks appear in forward (cycle-major) order
+    blocks = [n for n in names if n.startswith("cycles[")]
+    assert blocks == sorted(blocks, key=lambda s: (
+        int(s.split("][")[1][:-1]), int(s.split("[")[1].split("]")[0])))
+
+
+def test_streamed_residency_counter_matches_model():
+    """Lowering the streamed step on a 1-device mesh fills the trace-time
+    gather counter; ``check_zero3_residency`` must accept it with peak
+    agreement ~1.0 — the measured-vs-model contract of the bench."""
+    from repro.core.schedule import gates_from_schedule
+    from repro.data.synthetic import lm_batches, microbatch_assignment
+    from repro.launch.mesh import make_data_mesh
+    from repro.optim.optimizers import sgd
+    from repro.sharding.sync import (ResidencyRecorder,
+                                     check_zero3_residency)
+    from repro.train.loop import make_distributed_train_step
+
+    params = _params()
+    sched = paper_mix_schedule(L, G, N, (0.4, 0.3, 0.3), 0)
+    plan = grad_sync_plan(params, CFG, sched, mode="zero3", n_shards=1)
+    opt = sgd(1e-2)
+    rec = ResidencyRecorder()
+    step = make_distributed_train_step(
+        CFG, opt, make_data_mesh(1), plan, sync_mode="zero3",
+        params=params, streamed=True, opt_chunk=64,
+        residency_recorder=rec)
+    batch = next(lm_batches(0, CFG.vocab_size, 8, 8, 1))
+    gates = gates_from_schedule(sched, microbatch_assignment(8, N))
+    shards = zero_reshard(params, None, plan)
+    step.lower(shards, opt.init(params), batch, gates)
+    out = check_zero3_residency(rec, plan, params, 1)
+    assert out["peak_agreement"] == pytest.approx(1.0, abs=0.05)
+    assert out["n_units_measured"] > 0
+    assert out["n_units_measured"] <= out["n_units_model"]
+
+
+def test_streamed_mode_validation():
+    """streamed / opt_chunk are ZeRO-3-only, and streamed cannot compose
+    with the pre-sync NaN guard (the reduce-scatters are fused into the
+    backward, so there is no point where local grads exist to zero)."""
+    from repro.launch.mesh import make_data_mesh
+    from repro.optim.optimizers import sgd
+    from repro.train.loop import make_distributed_train_step
+
+    params = _params()
+    sched = paper_mix_schedule(L, G, N, (0.4, 0.3, 0.3), 0)
+    mesh = make_data_mesh(1)
+    plan = grad_sync_plan(params, CFG, sched, mode="zero3", n_shards=1)
+    with pytest.raises(ValueError, match="guard"):
+        make_distributed_train_step(CFG, sgd(1e-2), mesh, plan,
+                                    sync_mode="zero3", params=params,
+                                    streamed=True, guard=True)
+    plan_m = grad_sync_plan(params, CFG, sched, mode="masked")
+    with pytest.raises(AssertionError):
+        make_distributed_train_step(CFG, sgd(1e-2), mesh, plan_m,
+                                    sync_mode="masked", params=params,
+                                    streamed=True)
+
+
+def test_zero3_overlap_report_model():
+    """Overlap-window model invariants: exposed < serialized on the
+    paper-mix (some gathers hide behind the previous unit's compute), more
+    compute hides more, zero compute exposes everything, and the
+    double-buffered window dominates the single-unit one."""
+    from repro.launch.diststep import zero3_overlap_report
+    params = _params()
+    sched = paper_mix_schedule(L, G, N, (0.4, 0.3, 0.3), 0)
+    plan = grad_sync_plan(params, CFG, sched, mode="zero3", n_shards=8)
+    rep = zero3_param_byte_report(plan, params, 8)
+    ov = zero3_overlap_report(plan, params, 8)
+    assert 0.0 < ov["exposed_fraction"] < 1.0, ov
+    assert ov["exposed_gather_bytes"] <= ov["serialized_gather_bytes"]
+    assert ov["double_buffer_peak_bytes"] >= \
+        rep["per_device_peak_bytes"] - 1e-6
+    assert ov["double_buffer_fraction"] >= rep["fraction"] - 1e-9
+    ov4 = zero3_overlap_report(plan, params, 8, compute_ratio=4.0)
+    assert ov4["exposed_fraction"] <= ov["exposed_fraction"] + 1e-12
+    ov0 = zero3_overlap_report(plan, params, 8, compute_ratio=0.0)
+    assert ov0["exposed_fraction"] == pytest.approx(1.0)
+
+
 @pytest.mark.multidevice
 def test_distributed_parity_8dev_subprocess():
     """Acceptance: 8-host-device shard_map step == single-device gated step

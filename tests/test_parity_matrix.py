@@ -76,7 +76,8 @@ def reference(setup):
 
 
 @pytest.mark.parametrize("path", ["kernel", "compacted", "dist_masked",
-                                  "dist_zero", "dist_zero3"])
+                                  "dist_zero", "dist_zero3",
+                                  "dist_zero3_streamed"])
 def test_parity_matrix(path, setup, reference):
     sched, params, batch, gates, bounds = setup
     opt = sgd(1e-2)
@@ -90,11 +91,18 @@ def test_parity_matrix(path, setup, reference):
         from repro.launch.mesh import make_data_mesh
         mesh = make_data_mesh(1)
         mode = {"dist_masked": "masked", "dist_zero": "zero",
-                "dist_zero3": "zero3"}[path]
+                "dist_zero3": "zero3",
+                "dist_zero3_streamed": "zero3"}[path]
+        # the streamed arm also runs the chunked shard-resident optimizer
+        # sweep (non-divisor chunk so the zero-padding path is exercised)
+        streamed = path == "dist_zero3_streamed"
         plan = grad_sync_plan(params, CFG, sched, mode=mode, n_shards=1,
                               elide_gather=opt.elidable)
         step = make_distributed_train_step(CFG, opt, mesh, plan,
-                                           sync_mode=mode, params=params)
+                                           sync_mode=mode, params=params,
+                                           streamed=streamed,
+                                           opt_chunk=(48 if streamed
+                                                      else None))
         if mode == "zero3":
             # zero3 holds the params in the plan's shard layout between
             # steps; run layout-in, layout-out and compare canonically
@@ -134,13 +142,17 @@ def lora_reference(setup):
     return lora, p
 
 
-@pytest.mark.parametrize("path", ["lora_kernel", "lora_dist"])
+@pytest.mark.parametrize("path", ["lora_kernel", "lora_dist",
+                                  "lora_dist_streamed"])
 def test_parity_matrix_lora(path, setup, lora_reference):
     """LoRA arm: adapters-only gradients through the gated paths. The
     distributed variant runs the same adapter loss inside shard_map with a
     full-sync plan over the adapter tree (adapters have no head-group
-    axis, so they never skip)."""
-    _, params, batch, gates, _ = setup
+    axis, so they never skip). The streamed variant additionally holds the
+    frozen base in the ZeRO-3 shard layout and stream-materializes it
+    under the schedule's gather mask before the merge — streaming must
+    compose with adapters-only training."""
+    sched, params, batch, gates, _ = setup
     lora0, ref = lora_reference
     opt = sgd(1e-2)
     if path == "lora_kernel":
@@ -153,14 +165,23 @@ def test_parity_matrix_lora(path, setup, lora_reference):
         from jax.sharding import PartitionSpec as P
 
         from repro.launch.mesh import make_data_mesh
-        from repro.sharding.sync import apply_grad_sync
+        from repro.sharding.sync import (apply_grad_sync, zero_reshard,
+                                         zero3_stream_materialize)
 
         plan = jax.tree.map(lambda _: SyncSpec("all"), lora0)
         mesh = make_data_mesh(1)
+        streamed = path == "lora_dist_streamed"
+        if streamed:
+            plan3 = grad_sync_plan(params, CFG, sched, mode="zero3",
+                                   n_shards=1, elide_gather=opt.elidable)
+            base_shards = zero_reshard(params, None, plan3)
 
         def local(lora_p, st, batch, gates):
+            base = zero3_stream_materialize(base_shards, plan3, "data") \
+                if streamed else params
+
             def loss(lp):
-                merged = merge_lora(params, lp, 1.0)
+                merged = merge_lora(base, lp, 1.0)
                 return lm_loss(merged, CFG, batch["tokens"],
                                batch["labels"], gates=gates)[0]
             g = jax.grad(loss)(lora_p)
