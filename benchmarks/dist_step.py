@@ -81,6 +81,16 @@ def main():
           f"double_buffer_fraction={ov['double_buffer_fraction']:.3f};"
           f"wire_ratio_vs_unstreamed={ov['wire_ratio_vs_unstreamed']:.4f};"
           f"exposed_target<1.0")
+    pp = rec["pipeline"]
+    print(f"pipeline,{pp.get('wall_us_per_step', 0.0):.1f},"
+          f"mesh=data{pp['mesh']['data']}xstage{pp['mesh']['stage']};"
+          f"boundaries={pp['boundaries']};"
+          f"makespan_ratio={pp['makespan_ratio']:.3f};"
+          f"bubble_fraction={pp['bubble_fraction']:.3f};"
+          f"layer_count_bubble_fraction="
+          f"{pp['layer_count_bubble_fraction']:.3f};"
+          f"trace_ok={pp['trace']['trace_ok']};"
+          f"ratio_target<0.95")
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=2)
     print(f"# wrote {args.out}", file=sys.stderr)

@@ -44,8 +44,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.assignment import (device_sample_order,
-                                   distributed_live_bounds,
-                                   plan_device_assignment)
+                                   distributed_live_bounds, layer_live_costs,
+                                   plan_device_assignment,
+                                   plan_stage_assignment)
 from repro.core.cost_model import comm_cost, compute_cost
 from repro.core.schedule import (P_F, P_O, P_S, Schedule,
                                  gates_from_schedule, op_counts)
@@ -53,6 +54,7 @@ from repro.data.synthetic import lm_batches, microbatch_assignment
 from repro.launch.hlo import (collective_bytes, collective_counts,
                               compare_collective_bytes)
 from repro.launch.mesh import make_data_mesh
+from repro.launch.parallel import MeshSpec, ParallelConfig
 from repro.models.transformer import init_model
 from repro.optim.optimizers import adamw
 from repro.sharding.sync import (ResidencyRecorder, check_zero3_residency,
@@ -61,6 +63,7 @@ from repro.sharding.sync import (ResidencyRecorder, check_zero3_residency,
                                  zero3_unit_schedule, zero_reshard,
                                  zero_state_byte_report)
 from repro.train.loop import make_distributed_train_step
+from repro.train.pipeline import PipelineRecorder, analytic_bubble_fraction
 
 
 def small_config() -> ModelConfig:
@@ -269,14 +272,14 @@ def measure_distributed_step(n_devices: int = 8, *,
         bounds = distributed_live_bounds(sched, mb_of, assignment) \
             if use_kernel else None
         recorder = ResidencyRecorder() if streamed else None
+        pconf = ParallelConfig(mesh=MeshSpec(data=n_devices),
+                               sync_mode=sync_mode, streamed=streamed,
+                               opt_chunk=opt_chunk if streamed else None,
+                               use_kernel=use_kernel)
         step = make_distributed_train_step(cfg, opt, mesh, plan,
-                                           use_kernel=use_kernel,
+                                           parallel=pconf,
                                            live_bounds=bounds,
-                                           sync_mode=sync_mode,
                                            params=params,
-                                           streamed=streamed,
-                                           opt_chunk=(opt_chunk if streamed
-                                                      else None),
                                            residency_recorder=recorder)
         # zero3 holds the params in the plan's shard layout between steps
         pvar = zero_reshard(params, None, plan) if sync_mode == "zero3" \
@@ -399,7 +402,77 @@ def measure_distributed_step(n_devices: int = 8, *,
             z3s["wire_bytes"] / z3["wire_bytes"]
             if z3["wire_bytes"] else 1.0,
     }
+    record["pipeline"] = _measure_pipeline_variant(
+        cfg, opt, opt_state, params, data, schedules["paper_mix"], mb_of,
+        n_devices, time_steps=time_steps)
     return record
+
+
+def _measure_pipeline_variant(cfg, opt, opt_state, params, data, sched,
+                              mb_of, n_devices: int, *, n_stages: int = 2,
+                              n_microbatches: int = 4,
+                              time_steps: int = 0) -> dict:
+    """Lower the GPipe pipeline step on a (data x stage) carve of the same
+    device pool and price its balancing: the live-cost stage packing's
+    makespan vs layer-count packing (``makespan_ratio`` — the acceptance
+    gate, < 1 when the schedule concentrates cost unevenly across layers)
+    and the analytic + trace-hook bubble accounting."""
+    pipe_data = n_devices // n_stages
+    spec = MeshSpec(data=pipe_data, stage=n_stages)
+    mesh = spec.build()
+    stage_assign, stage_rep = plan_stage_assignment(sched, n_stages)
+    pconf = ParallelConfig(mesh=spec, microbatches=n_microbatches)
+    recorder = PipelineRecorder()
+    plan = grad_sync_plan(params, cfg, sched)
+    assignment, rebalance = plan_device_assignment(sched, pipe_data)
+    perm = device_sample_order(assignment, mb_of)
+    pbatch = jax.tree.map(lambda a: a[perm], data)
+    gates = gates_from_schedule(sched, mb_of[perm])
+    step = make_distributed_train_step(cfg, opt, mesh, plan,
+                                       parallel=pconf,
+                                       stage_assignment=stage_assign,
+                                       pipeline_recorder=recorder)
+    args = (params, opt_state, pbatch, gates)
+    compiled = step.lower(*args).compile()
+    hlo_text = compiled.as_text()
+    # layer-count packing's loads (what naive uniform splitting would run)
+    costs = layer_live_costs(sched)
+    ub = stage_rep["layer_count_boundaries"]
+    uniform_loads = [float(sum(costs[lo:hi]))
+                     for lo, hi in zip(ub, ub[1:])]
+    var = {
+        "mesh": {"data": pipe_data, "stage": n_stages},
+        "n_microbatches": n_microbatches,
+        "rebalance": rebalance,
+        "boundaries": stage_rep["boundaries"],
+        "loads": stage_rep["loads"],
+        "makespan": stage_rep["makespan"],
+        "layer_count_boundaries": list(ub),
+        "layer_count_makespan": stage_rep["layer_count_makespan"],
+        # live-cost packing vs layer-count packing (< 1.0 = the assigner
+        # found a strictly better split; the bench gate pins < 0.95)
+        "makespan_ratio": stage_rep["makespan_ratio"],
+        "bubble_fraction": analytic_bubble_fraction(
+            stage_assign.loads, n_microbatches),
+        "layer_count_bubble_fraction": analytic_bubble_fraction(
+            uniform_loads, n_microbatches),
+        # trace-hook cross-check of the round/send model (lowering above
+        # traced the step, so the recorder holds the real counts)
+        "trace": recorder.report(),
+        "collectives_n": collective_counts(hlo_text),
+        "collectives": collective_bytes(hlo_text,
+                                        default_group_size=n_devices),
+    }
+    if time_steps > 0:
+        p, s, m = compiled(*args)       # warm
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(time_steps):
+            p, s, m = compiled(p, s, pbatch, gates)
+        jax.block_until_ready(m["loss"])
+        var["wall_us_per_step"] = (time.perf_counter() - t0) \
+            / time_steps * 1e6
+    return var
 
 
 def measure_elastic(n_devices: int = 8, *, seed: int = 0) -> dict:

@@ -4,7 +4,13 @@ Target: TPU v5e, 256 chips per pod. Single pod = (data=16, model=16);
 two pods = (pod=2, data=16, model=16) with the ``pod`` axis carrying
 data parallelism across the DCN/ICI boundary (gradient all-reduce only).
 
-Defined as a FUNCTION so importing this module never touches jax device
+All constructors are thin wrappers over the one mesh entry point,
+``launch.parallel.MeshSpec.build`` — multi-axis (data, stage, tensor)
+meshes come straight from ``MeshSpec(...).build()``; the functions here
+keep the legacy axis layouts (1-D ``("data",)``, GSPMD
+``("data", "model")``) alive.
+
+Defined as FUNCTIONS so importing this module never touches jax device
 state (required: smoke tests must see 1 CPU device; only dryrun.py sets
 XLA_FLAGS for 512 host devices before any jax import).
 """
@@ -28,16 +34,30 @@ def compat_make_mesh(shape, axes):
 
 
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return compat_make_mesh(shape, axes)
+    from repro.launch.parallel import MeshSpec
+    if multi_pod:
+        # the pod axis rides the spec's data slot; data/model fill stage/
+        # tensor — build() is a pure reshape+naming, the semantics live in
+        # the axis names
+        return MeshSpec(data=2, stage=16, tensor=16).build(
+            axis_names=("pod", "data", "model"), auto_axes=True)
+    return MeshSpec(data=16, stage=16).build(
+        axis_names=("data", "model"), auto_axes=True)
 
 
 def make_host_mesh(model: int = 1):
-    """Tiny mesh over however many local devices exist (tests/examples)."""
+    """Tiny ("data", "model") mesh over ALL local devices (tests/examples)."""
+    from repro.launch.parallel import MeshSpec
     n = len(jax.devices())
-    data = n // model
-    return compat_make_mesh((data, model), ("data", "model"))
+    if n % model:
+        # never drop remainder devices silently (same contract as
+        # make_data_mesh's short-mesh refusal)
+        raise ValueError(
+            f"make_host_mesh(model={model}) cannot tile {n} local devices: "
+            f"{n} % {model} != 0 would silently drop "
+            f"{n % model} device(s)")
+    return MeshSpec(data=n // model, stage=model).build(
+        axis_names=("data", "model"), auto_axes=True)
 
 
 def make_data_mesh(n_devices=None):
@@ -47,17 +67,9 @@ def make_data_mesh(n_devices=None):
     is pure data parallelism, so it runs on this or on make_host_mesh's
     ("data", "model") mesh alike; the explicit device count lets the
     dry-run carve an 8-device data mesh out of its 512 host devices."""
-    import numpy as np
-    devs = jax.devices()
-    n = len(devs) if n_devices is None else int(n_devices)
-    if n > len(devs):
-        # never truncate silently: a bench/dry-run asking for 8 devices on
-        # a 1-device backend would otherwise record a bogus measurement
-        raise ValueError(
-            f"requested a {n}-device data mesh but only {len(devs)} local "
-            "devices exist (--xla_force_host_platform_device_count must be "
-            "in XLA_FLAGS before jax initializes)")
-    return jax.sharding.Mesh(np.asarray(devs[:n]), ("data",))
+    from repro.launch.parallel import MeshSpec
+    n = len(jax.devices()) if n_devices is None else int(n_devices)
+    return MeshSpec(data=n).build(axis_names=("data",))
 
 
 # TPU v5e hardware constants used by the roofline analysis.

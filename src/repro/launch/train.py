@@ -22,6 +22,7 @@ from repro.configs import INPUT_SHAPES, get_config, get_smoke_config
 from repro.configs.base import D2FTConfig
 from repro.data.synthetic import lm_batches
 from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.parallel import MeshSpec, ParallelConfig
 from repro.models.transformer import init_model
 from repro.optim.optimizers import adamw, sgd
 from repro.sharding.policy import ShardingPolicy
@@ -50,6 +51,14 @@ def main():
                     help="route attention through the compacted Pallas "
                          "gated kernel path (single-device or per-shard "
                          "with --distributed; interpret mode on CPU)")
+    ap.add_argument("--mesh", default=None, metavar="data=D,stage=S,tensor=T",
+                    help="multi-axis device mesh (launch.parallel.MeshSpec "
+                         "syntax, unlisted axes default 1): stage>1 runs "
+                         "the GPipe microbatch pipeline with live-cost "
+                         "stage packing, tensor>1 shards attention heads / "
+                         "FFN columns Megatron-style; requires "
+                         "--distributed and enough local devices "
+                         "(default: all-data mesh)")
     ap.add_argument("--sync-mode",
                     choices=("masked", "zero", "zero3", "local"),
                     default="masked",
@@ -99,12 +108,19 @@ def main():
                          "original mesh size or a shrunk one")
     args = ap.parse_args()
 
+    spec = MeshSpec.parse(args.mesh) if args.mesh else None
+    if spec is not None and not args.distributed:
+        raise SystemExit("--mesh only applies to the --distributed path")
+    if spec is not None and args.elastic and \
+            (spec.stage > 1 or spec.tensor > 1):
+        raise SystemExit("--elastic runs on a pure data mesh; use "
+                         "--mesh data=N (stage=tensor=1)")
     if args.full:
         cfg = get_config(args.arch)
-        mesh = make_production_mesh()
+        mesh = spec.build() if spec is not None else make_production_mesh()
     else:
         cfg = get_smoke_config(args.arch)
-        mesh = make_host_mesh()
+        mesh = spec.build() if spec is not None else make_host_mesh()
     print(f"arch={cfg.name} layers={cfg.n_layers} d_model={cfg.d_model} "
           f"mesh={dict(mesh.shape)}")
 
@@ -146,7 +162,17 @@ def main():
         if args.packed:
             raise SystemExit("--distributed and --packed are exclusive "
                              "(the shard_map step drives the gated paths)")
+        if spec is None:
+            spec = MeshSpec(data=int(mesh.shape["data"]))
+        pconf = ParallelConfig(
+            mesh=spec, sync_mode=args.sync_mode, use_kernel=args.kernel,
+            microbatches=args.n_microbatches if spec.stage > 1 else 0)
         ndev = mesh.shape["data"]
+        if spec.stage > 1 and (args.batch // ndev) % args.n_microbatches:
+            raise SystemExit(
+                f"pipeline needs the per-data-shard batch divisible by the "
+                f"microbatch count: ({args.batch} / {ndev}) % "
+                f"{args.n_microbatches} != 0")
         if args.n_microbatches % ndev:
             raise SystemExit(
                 f"--distributed needs --n-microbatches divisible by the "
@@ -184,13 +210,19 @@ def main():
         else:
             params, opt_state, log = finetune_distributed(
                 params, cfg, d2, opt, batches, steps=args.steps,
-                mesh=mesh, use_kernel=args.kernel,
-                sync_mode=args.sync_mode,
+                mesh=mesh, parallel=pconf,
                 refresh_every=args.refresh_every)
         rep, sync = log.extras["rebalance"], log.extras.get("sync")
         print(f"assignment: loads {rep['loads']} spread {rep['spread']} "
               f"imbalance {rep['imbalance']:.3f} "
               f"({len(log.extras.get('refreshes', []))} replans)")
+        stages = log.extras.get("stages")
+        if stages is not None:
+            print(f"pipeline: boundaries {stages['boundaries']} "
+                  f"loads {stages['loads']} "
+                  f"makespan_ratio {stages['makespan_ratio']:.3f} "
+                  f"(vs layer-count {stages['layer_count_boundaries']}) "
+                  f"bubble {stages['bubble_fraction']:.3f}")
         if sync is None:
             print("grad sync: none (lo-fi local replicas, merged "
                   f"every {args.merge_every} steps)")

@@ -54,6 +54,58 @@ def _group_project(heads_out, wo, G):
     return per_head.reshape(B, S, G, H // G, D).sum(axis=3)
 
 
+# =================================================== tensor-parallel helpers
+# tp = (axis_name, T): Megatron-style sharding over a shard_map mesh axis.
+# Weights stay replicated (ZeRO over the data axis composes unchanged);
+# each device COMPUTES only its contiguous block of heads / FFN columns
+# and the partial residual contributions are psum'd over the axis.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _tp_copy(x, axis_name):
+    """Megatron's f operator: identity forward, psum backward. Placed at
+    every tensor-parallel region's input so the activation cotangent —
+    which each device only computes for its own head/column slice — is
+    all-reduced, keeping grads of everything upstream replicated-exact."""
+    return x
+
+
+def _tp_copy_fwd(x, axis_name):
+    return x, None
+
+
+def _tp_copy_bwd(axis_name, _, g):
+    return (jax.lax.psum(g, axis_name),)
+
+
+_tp_copy.defvjp(_tp_copy_fwd, _tp_copy_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _tp_sum(x, axis_name):
+    """Megatron's g operator: psum forward, identity backward. Used at
+    every tensor-parallel region's output — the downstream cotangent is
+    replicated over the axis, so the backward must NOT re-reduce it
+    (pinned here explicitly rather than relying on psum's transpose)."""
+    return jax.lax.psum(x, axis_name)
+
+
+def _tp_sum_fwd(x, axis_name):
+    return jax.lax.psum(x, axis_name), None
+
+
+def _tp_sum_bwd(axis_name, _, g):
+    return (g,)
+
+
+_tp_sum.defvjp(_tp_sum_fwd, _tp_sum_bwd)
+
+
+def _tp_gate_slice(layer_gates, idx, G_local):
+    """This device's contiguous block of head-group gates ([B, G] pair)."""
+    g_f, g_b = layer_gates
+    return (jax.lax.dynamic_slice_in_dim(g_f, idx * G_local, G_local, 1),
+            jax.lax.dynamic_slice_in_dim(g_b, idx * G_local, G_local, 1))
+
+
 # ============================================================== block params
 def _init_block(key, kind: str, cfg: ModelConfig, dtype):
     ks = jax.random.split(key, 4)
@@ -89,16 +141,42 @@ def _split_gates(gates, idx):
 
 # ============================================================= block forward
 def _apply_attn_inner(p, h, kind, cfg: ModelConfig, layer_gates, policy,
-                      use_kernel: bool = False, live_bounds=None):
+                      use_kernel: bool = False, live_bounds=None, tp=None):
     """Attention contribution (pre-residual), with per-head-group gating.
 
     live_bounds: static (live_fwd, live_bwd) bounds at (sample, group)
     granularity (``core.schedule.live_slice_bounds``); scaled to per-head
-    slice counts here before reaching the kernel's compaction dispatch."""
+    slice counts here before reaching the kernel's compaction dispatch.
+    tp: optional (axis_name, T) — shard the H heads over a shard_map
+    tensor axis. Contiguous head blocks keep the GQA query->kv mapping
+    and the (head-group) gate tiling exact when T divides H, Hkv and G."""
     window = cfg.window if kind == ATTN_LOCAL else 0
     hd = cfg.resolved_head_dim
     B, S, _ = h.shape
     n_heads, n_kv = cfg.n_heads, cfg.n_kv_heads
+    if tp is not None:
+        tp_axis, T = tp
+        assert policy is None and not use_kernel, \
+            "tensor parallelism has no policy/kernel route"
+        assert n_heads % T == 0 and n_kv % T == 0, (n_heads, n_kv, T)
+        idx = jax.lax.axis_index(tp_axis)
+        h = _tp_copy(h, tp_axis)
+        hq, hkv = n_heads // T, n_kv // T
+
+        def sl(a, width, axis):
+            return jax.lax.dynamic_slice_in_dim(a, idx * width, width, axis)
+
+        p = dict(p, wq=sl(p["wq"], hq * hd, 1), wk=sl(p["wk"], hkv * hd, 1),
+                 wv=sl(p["wv"], hkv * hd, 1), wo=sl(p["wo"], hq * hd, 0))
+        if "bq" in p:
+            p["bq"] = sl(p["bq"], hq * hd, 0)
+            p["bk"] = sl(p["bk"], hkv * hd, 0)
+            p["bv"] = sl(p["bv"], hkv * hd, 0)
+        n_heads, n_kv = hq, hkv
+        if layer_gates is not None:
+            G = layer_gates[0].shape[-1]
+            assert G % T == 0, (G, T)
+            layer_gates = _tp_gate_slice(layer_gates, idx, G // T)
     if policy is not None and layer_gates is None:
         padding = policy.head_padding()
         if padding is not None:
@@ -150,17 +228,22 @@ def _apply_attn_inner(p, h, kind, cfg: ModelConfig, layer_gates, policy,
         else:
             out = attn._sdpa(q, k, v, jnp.ones((1, 1, S, S), bool))
     if layer_gates is None:
-        return out.reshape(B, S, n_heads * hd) @ p["wo"]
+        c = out.reshape(B, S, n_heads * hd) @ p["wo"]
+        return _tp_sum(c, tp[0]) if tp is not None else c
     # group-wise projection + gate_mix: on the kernel path this also cuts
     # wo gradients for p_o groups, matching the masked reference exactly.
     g_f, g_b = layer_gates
     G = g_f.shape[-1]
     c_g = _group_project(out, p["wo"], G)               # [B,S,G,D]
-    return gate_mix(c_g, g_f, g_b).sum(axis=2)
+    c = gate_mix(c_g, g_f, g_b).sum(axis=2)
+    return _tp_sum(c, tp[0]) if tp is not None else c
 
 
 def _apply_ffn(p, h, cfg: ModelConfig, layer_gates, policy,
-               use_kernel: bool = False, live_bounds=None):
+               use_kernel: bool = False, live_bounds=None, tp=None):
+    # MoE compute stays replicated under tensor parallelism (the
+    # expert-parallel route is the GSPMD policy path) — replicated inputs
+    # give replicated outputs/grads, so no psum is needed.
     if "moe" in p:
         if policy is not None and policy.moe_sharded(cfg):
             if use_kernel:
@@ -199,22 +282,47 @@ def _apply_ffn(p, h, cfg: ModelConfig, layer_gates, policy,
             g_f, g_b = layer_gates
             y = gate_mix(y[:, :, None, :], g_f[:, :1], g_b[:, :1])[:, :, 0]
         return y, aux
-    up = h @ p["mlp"]["w_up"]
+    mlp = p["mlp"]
+    if tp is not None:
+        # FFN columns over the tensor axis: T | G keeps each device's
+        # F/T-column block an integral number of whole gate groups, so the
+        # grouped w_down reshape below stays exact on the local slice.
+        tp_axis, T = tp
+        assert policy is None, "tensor parallelism has no policy route"
+        idx = jax.lax.axis_index(tp_axis)
+        h = _tp_copy(h, tp_axis)
+        F_full = mlp["w_up"].shape[-1]
+        assert F_full % T == 0, (F_full, T)
+        Fl = F_full // T
+
+        def sl(a, axis):
+            return jax.lax.dynamic_slice_in_dim(a, idx * Fl, Fl, axis)
+
+        mlp = dict(mlp, w_up=sl(mlp["w_up"], 1), w_down=sl(mlp["w_down"], 0))
+        if "w_gate" in mlp:
+            mlp["w_gate"] = sl(mlp["w_gate"], 1)
+        if layer_gates is not None:
+            G = layer_gates[0].shape[-1]
+            assert G % T == 0 and F_full % G == 0, (G, T, F_full)
+            layer_gates = _tp_gate_slice(layer_gates, idx, G // T)
+    up = h @ mlp["w_up"]
     if cfg.mlp_gated:
-        hid = _act(cfg.mlp_act)(h @ p["mlp"]["w_gate"]) * up
+        hid = _act(cfg.mlp_act)(h @ mlp["w_gate"]) * up
     else:
         hid = _act(cfg.mlp_act)(up)
     if policy is not None:
         hid = policy.ffn(hid)
     if layer_gates is None:
-        return hid @ p["mlp"]["w_down"], None
+        y = hid @ mlp["w_down"]
+        return (_tp_sum(y, tp[0]) if tp is not None else y), None
     g_f, g_b = layer_gates
     G = g_f.shape[-1]
     B, S, F = hid.shape
-    D = p["mlp"]["w_down"].shape[-1]
-    wd = p["mlp"]["w_down"].reshape(G, F // G, D)
+    D = mlp["w_down"].shape[-1]
+    wd = mlp["w_down"].reshape(G, F // G, D)
     c_g = jnp.einsum("bsgf,gfD->bsgD", hid.reshape(B, S, G, F // G), wd)
-    return gate_mix(c_g, g_f, g_b).sum(axis=2), None
+    y = gate_mix(c_g, g_f, g_b).sum(axis=2)
+    return (_tp_sum(y, tp[0]) if tp is not None else y), None
 
 
 def _apply_ssd_inner(p, h, cfg: ModelConfig, layer_gates,
@@ -277,12 +385,17 @@ def _apply_rglru_inner(p, h, cfg: ModelConfig, layer_gates,
 
 
 def apply_block(p, x, kind: str, cfg: ModelConfig, layer_gates=None,
-                policy=None, use_kernel: bool = False, live_bounds=None):
-    """Pre-norm residual block. Returns (x, aux_losses or None)."""
+                policy=None, use_kernel: bool = False, live_bounds=None,
+                tp=None):
+    """Pre-norm residual block. Returns (x, aux_losses or None).
+
+    tp: optional (axis_name, T) shard_map tensor-parallel spec — attention
+    heads and FFN columns shard over the axis, SSD/RG-LRU/MoE blocks run
+    replicated (their grads stay replicated, so no psum is needed)."""
     h = apply_norm(p["norm1"], x, cfg.norm)
     if kind in (ATTN_GLOBAL, ATTN_LOCAL):
         c = _apply_attn_inner(p["attn"], h, kind, cfg, layer_gates, policy,
-                              use_kernel, live_bounds)
+                              use_kernel, live_bounds, tp)
     elif kind == SSD:
         c = _apply_ssd_inner(p["ssd"], h, cfg, layer_gates, use_kernel,
                              live_bounds)
@@ -301,7 +414,7 @@ def apply_block(p, x, kind: str, cfg: ModelConfig, layer_gates=None,
     if "norm2" in p:
         h2 = apply_norm(p["norm2"], x, cfg.norm)
         y, aux = _apply_ffn(p, h2, cfg, layer_gates, policy, use_kernel,
-                            live_bounds)
+                            live_bounds, tp)
         if policy is not None:
             y = policy.residual(y)
         x = x + y
@@ -348,7 +461,7 @@ def init_model(key, cfg: ModelConfig):
 # ============================================================ model forward
 def forward(params, cfg: ModelConfig, tokens=None, features=None,
             gates=None, policy=None, remat: bool = False,
-            use_kernel: bool = False, live_bounds=None):
+            use_kernel: bool = False, live_bounds=None, tp=None):
     """Returns (logits, aux) — logits [B, S, vocab].
 
     tokens: [B, S_text] int32 (None for pure-audio encoders)
@@ -360,6 +473,9 @@ def forward(params, cfg: ModelConfig, tokens=None, features=None,
         (sample, group) slice counts from ``core.schedule
         .live_slice_bounds`` — enables the kernel path's compaction
         dispatch (one shared bound so scan compiles a single body).
+    tp: optional (axis_name, T) shard_map tensor-parallel spec (must be
+        traced inside shard_map over a mesh with that axis; see
+        ``apply_block``). Embedding/norm/logits compute stays replicated.
     """
     cdt = jnp.dtype(cfg.compute_dtype)
     parts = []
@@ -394,7 +510,7 @@ def forward(params, cfg: ModelConfig, tokens=None, features=None,
             for i in range(P):
                 lg = (gfc[i], gbc[i]) if gates is not None else None
                 x, a = apply_block(blocks[i], x, pat[i], cfg, lg, policy,
-                                   use_kernel, live_bounds)
+                                   use_kernel, live_bounds, tp)
                 if a is not None:
                     aux = aux + a["load_balance"] + a["router_z"]
             return (x, aux), None
@@ -419,7 +535,7 @@ def forward(params, cfg: ModelConfig, tokens=None, features=None,
         if gates is not None:
             lg = (g_rest[0][i], g_rest[1][i])
         x, a = apply_block(params["rest"][i], x, kind, cfg, lg, policy,
-                           use_kernel, live_bounds)
+                           use_kernel, live_bounds, tp)
         if a is not None:
             aux_sum = aux_sum + a["load_balance"] + a["router_z"]
 
@@ -665,11 +781,12 @@ fused_xent.defvjp(lambda logits, labels: _xent_fwd_impl(logits, labels),
 
 def lm_loss(params, cfg: ModelConfig, tokens, labels, features=None,
             gates=None, policy=None, remat: bool = False,
-            use_kernel: bool = False, live_bounds=None):
+            use_kernel: bool = False, live_bounds=None, tp=None):
     """Next-token (or frame-classification) cross-entropy."""
     logits, aux = forward(params, cfg, tokens=tokens, features=features,
                           gates=gates, policy=policy, remat=remat,
-                          use_kernel=use_kernel, live_bounds=live_bounds)
+                          use_kernel=use_kernel, live_bounds=live_bounds,
+                          tp=tp)
     if features is not None and tokens is not None:
         # VLM: loss only over the text region (labels align to text tokens)
         logits = logits[:, -labels.shape[1]:]

@@ -1124,6 +1124,40 @@ def _leaf_from_canonical(x: np.ndarray, spec: SyncSpec) -> np.ndarray:
     return np.take(x, perm, axis=spec.axis)
 
 
+# ------------------------------------------------ tensor-axis grad combine
+# Leaves whose COMPUTE shards over the tensor axis (attention head blocks,
+# FFN column blocks — models.transformer tp= path). Their local grads are
+# disjoint slices of the true grad (zero outside this device's block), so
+# a psum over the tensor axis reassembles the full tensor. Every other
+# leaf's compute is replicated across the axis (identical grads after the
+# _tp_copy backward all-reduces the activation cotangent), so it must NOT
+# be psum'd. MoE reuses the w_up/w_gate/w_down names but runs replicated,
+# hence the parent-key restriction.
+_TP_SHARDED = {
+    "attn": {"wq", "wk", "wv", "wo", "bq", "bk", "bv"},
+    "mlp": {"w_up", "w_gate", "w_down"},
+}
+
+
+def apply_tensor_grad_sync(grads, axis_name: str):
+    """psum the tensor-parallel-sharded grad leaves over ``axis_name``;
+    replicated leaves pass through. Mirrors ``apply_grad_sync``'s role on
+    the data axis — run this FIRST, so the data-axis sync (masked / ZeRO
+    scatter) sees full per-data-shard grads."""
+    def walk(tree, parent=None):
+        if isinstance(tree, dict):
+            return {k: (jax.lax.psum(v, axis_name)
+                        if not isinstance(v, (dict, list, tuple))
+                        and k in _TP_SHARDED.get(parent, ())
+                        else walk(v, k))
+                    for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return [walk(v, parent) for v in tree]
+        return tree
+
+    return walk(grads)
+
+
 def zero_reshard(tree, old_plan, new_plan):
     """Re-layout a moments tree from one plan's shard layout to another's
     (host-side numpy; used when a schedule refresh changes the plan).

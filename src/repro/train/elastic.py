@@ -402,11 +402,15 @@ def finetune_elastic(params, cfg: ModelConfig, d2: D2FTConfig,
         if step_fn is None:
             bounds = distributed_live_bounds(sched, mb_of, assignment) \
                 if use_kernel else None
+            from repro.launch.parallel import MeshSpec, ParallelConfig
             step_fn = make_distributed_train_step(
                 cfg, opt, run_mesh, sync_plan, clip=clip,
-                use_kernel=use_kernel, live_bounds=bounds,
-                sync_mode=mode, params=params if mode != "local" else None,
-                guard=True, n_replicas=ndev)
+                live_bounds=bounds,
+                parallel=ParallelConfig(mesh=MeshSpec(data=ndev),
+                                        sync_mode=mode, guard=True,
+                                        use_kernel=use_kernel),
+                params=params if mode != "local" else None,
+                n_replicas=ndev)
         fault_vec = fp.grad_fault_vector(i, ndev)
         thresh = np.float32(np.inf)
         if el.guard_factor is not None and ema_gnorm is not None:

@@ -6,6 +6,7 @@ paper's ViT experiments and is what the paper-table benchmarks call.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Iterable, Optional
 
@@ -206,15 +207,79 @@ def _tree_where(cond, a, b):
     return jax.tree.map(lambda x, y: jnp.where(cond, x, y), a, b)
 
 
+_UNSET = object()     # sentinel: a deprecated loose kwarg was not passed
+
+
+def _resolve_parallel(parallel, mesh, given: dict, *, where: str):
+    """Deprecation shim: fold the historical loose kwargs into a
+    ``launch.parallel.ParallelConfig``.
+
+    ``given`` holds only the deprecated kwargs the caller actually passed
+    (callers filter out ``_UNSET``). Exactly one of ``parallel`` / loose
+    kwargs may be used. Legacy validation errors keep their types and
+    messages — ``ParallelConfig.validate()`` raises the same
+    AssertionError for streamed/opt_chunk off zero3 and the same
+    ``"streamed ZeRO-3 cannot guard"`` ValueError.
+
+    Returns (config, data_axis_name): the axis name stays a separate
+    return so the legacy ``axis_name=`` kwarg keeps working on meshes
+    whose data axis is not literally called "data"."""
+    from repro.launch.parallel import MeshSpec, ParallelConfig
+
+    if parallel is not None:
+        if given:
+            raise TypeError(
+                f"{where}: pass either parallel=ParallelConfig(...) or the "
+                f"deprecated kwargs {sorted(given)}, not both")
+        return parallel, parallel.data_axis
+    if given:
+        warnings.warn(
+            f"{where}({', '.join(sorted(given))}=...) is deprecated; pass "
+            "parallel=repro.launch.parallel.ParallelConfig(...) instead",
+            DeprecationWarning, stacklevel=3)
+    axis = given.pop("axis_name", "data")
+    shape = dict(mesh.shape) if mesh is not None else {}
+    spec = MeshSpec(data=int(shape.get(axis, 1)),
+                    stage=int(shape.get("stage", 1)),
+                    tensor=int(shape.get("tensor", 1)))
+    return ParallelConfig(mesh=spec, **given), axis
+
+
 def make_distributed_train_step(cfg: ModelConfig, opt: Optimizer, mesh,
-                                sync_plan, *, clip: float = 1.0,
-                                use_kernel: bool = False, live_bounds=None,
-                                axis_name: str = "data",
-                                sync_mode: str = "masked", params=None,
-                                guard: bool = False, n_replicas=None,
-                                streamed: bool = False, opt_chunk=None,
-                                residency_recorder=None):
-    """shard_map data-parallel gated train step (paper's *distributed* D2FT).
+                                sync_plan, *, parallel=None,
+                                clip: float = 1.0, live_bounds=None,
+                                params=None, n_replicas=None,
+                                residency_recorder=None,
+                                stage_assignment=None,
+                                pipeline_recorder=None,
+                                use_kernel=_UNSET, axis_name=_UNSET,
+                                sync_mode=_UNSET, guard=_UNSET,
+                                streamed=_UNSET, opt_chunk=_UNSET):
+    """shard_map multi-axis gated train step (paper's *distributed* D2FT).
+
+    ``parallel`` (a ``launch.parallel.ParallelConfig``) is the one knob
+    bundle: mesh spec (data/stage/tensor sizes), sync_mode, streamed,
+    opt_chunk, guard, use_kernel and pipeline microbatches. The loose
+    ``sync_mode=``/``guard=``/... kwargs below the sentinel line are the
+    deprecated pre-ParallelConfig spelling — still honored, with a
+    DeprecationWarning — and may not be mixed with ``parallel=``.
+
+    Axes beyond data compose around the same bodies:
+
+    * ``stage > 1`` — GPipe microbatch pipeline (``train.pipeline``): each
+      stage device runs its ``stage_assignment`` layer range (a
+      ``core.assignment.StageAssignment``, required) on
+      ``parallel.microbatches`` microbatches with ppermute handoffs; the
+      per-stage partial loss/metrics/grads are psum-completed over the
+      stage axis before any data-axis sync, so masked/ZeRO-1/ZeRO-3 see
+      exactly the replicated full-batch grads they always did.
+      ``pipeline_recorder`` (a ``train.pipeline.PipelineRecorder``) counts
+      rounds/sends at trace time for the bubble cross-check.
+    * ``tensor > 1`` — Megatron sharding of attention heads / FFN columns
+      inside each block (``models.transformer`` ``tp=``); the TP-sharded
+      leaf grads are disjoint slices, psum-reassembled over the tensor
+      axis (``sharding.sync.apply_tensor_grad_sync``) so everything
+      downstream again sees replicated full grads.
 
     Each device runs the masked/kernel gated path on its shard of the batch
     — its multiple-knapsack-assigned micro-batches after
@@ -296,26 +361,71 @@ def make_distributed_train_step(cfg: ModelConfig, opt: Optimizer, mesh,
     from jax.sharding import PartitionSpec as P
 
     from repro.optim.optimizers import chunked
-    from repro.sharding.sync import (apply_grad_sync, apply_zero_gather,
-                                     apply_zero_scatter, zero3_materialize,
+    from repro.sharding.sync import (apply_grad_sync, apply_tensor_grad_sync,
+                                     apply_zero_gather, apply_zero_scatter,
+                                     zero3_materialize,
                                      zero3_stream_materialize, zero_norm_sq,
                                      zero_param_specs, zero_shard_params)
+    from repro.train.pipeline import pipeline_loss
 
-    if streamed or opt_chunk:
-        assert sync_mode == "zero3", \
-            "streamed/opt_chunk require sync_mode='zero3'"
-    if streamed and guard:
-        raise ValueError("streamed ZeRO-3 cannot guard: the guard zeroes "
-                         "anomalous local grads before any collective, but "
-                         "the streamed reduce-scatters live inside the vjp")
+    given = {k: v for k, v in dict(
+        use_kernel=use_kernel, axis_name=axis_name, sync_mode=sync_mode,
+        guard=guard, streamed=streamed, opt_chunk=opt_chunk).items()
+        if v is not _UNSET}
+    parallel, axis_name = _resolve_parallel(
+        parallel, mesh, given, where="make_distributed_train_step")
+    sync_mode, guard = parallel.sync_mode, parallel.guard
+    streamed, opt_chunk = parallel.streamed, parallel.opt_chunk
+    use_kernel = parallel.use_kernel
+    S, T = parallel.mesh.stage, parallel.mesh.tensor
+    tp = (parallel.tensor_axis, T) if T > 1 else None
+    parallel.validate_model(cfg)
+    if (S > 1 or T > 1) and mesh is not None:
+        parallel.validate_mesh(mesh)
+    if S > 1:
+        assert stage_assignment is not None, \
+            "stage > 1 needs a core.assignment.StageAssignment " \
+            "(plan_stage_assignment on the current schedule)"
+        assert stage_assignment.n_stages == S, \
+            (stage_assignment.n_stages, S)
     upd_opt = chunked(opt, opt_chunk) if opt_chunk else opt
 
-    def loss_of(params, batch, gates):
-        def fn(p):
-            return lm_loss(p, cfg, batch.get("tokens"), batch["labels"],
-                           features=batch.get("features"), gates=gates,
-                           use_kernel=use_kernel, live_bounds=live_bounds)
-        return jax.value_and_grad(fn, has_aux=True)(params)
+    def grads_of(params_full, batch, gates):
+        """value_and_grad of the local loss. Under stage/tensor axes the
+        per-device partials are psum-completed HERE, so every body below
+        sees full-batch replicated (loss, metrics, grads) exactly as on a
+        pure data mesh — masked/ZeRO sync tails compose unchanged."""
+        if S > 1:
+            assert batch.get("features") is None, \
+                "the pipeline path is tokens-only"
+
+            def fn(p):
+                return pipeline_loss(
+                    p, cfg, batch["tokens"], batch["labels"], gates,
+                    boundaries=stage_assignment.boundaries,
+                    n_microbatches=parallel.microbatches,
+                    stage_axis=parallel.stage_axis, tp=tp,
+                    recorder=pipeline_recorder)
+        else:
+            def fn(p):
+                return lm_loss(p, cfg, batch.get("tokens"), batch["labels"],
+                               features=batch.get("features"), gates=gates,
+                               use_kernel=use_kernel,
+                               live_bounds=live_bounds, tp=tp)
+        (loss, metrics), grads = jax.value_and_grad(
+            fn, has_aux=True)(params_full)
+        if S > 1:
+            # stage partials (each stage's own layers, last stage's head)
+            # sum to the full-batch values; grad supports are disjoint per
+            # layer, so the psum is a reassembly, not an average
+            stage_ax = parallel.stage_axis
+            loss = jax.lax.psum(loss, stage_ax)
+            metrics = {k: jax.lax.psum(v, stage_ax)
+                       for k, v in metrics.items()}
+            grads = jax.tree.map(lambda g: jax.lax.psum(g, stage_ax), grads)
+        if tp is not None:
+            grads = apply_tensor_grad_sync(grads, tp[0])
+        return (loss, metrics), grads
 
     def guard_local(grads, fault, thresh):
         """Fault-inject, then neutralize anomalous local grads BEFORE any
@@ -340,7 +450,7 @@ def make_distributed_train_step(cfg: ModelConfig, opt: Optimizer, mesh,
                      bad_blocks=jax.lax.psum(n_bad_blocks, axis_name)))
 
     def local_step(params, opt_state, batch, gates, fault=None, thresh=None):
-        (loss, metrics), grads = loss_of(params, batch, gates)
+        (loss, metrics), grads = grads_of(params, batch, gates)
         if guard:
             grads, bad, n_bad_blocks = guard_local(grads, fault, thresh)
         grads = apply_grad_sync(grads, sync_plan, axis_name)
@@ -358,7 +468,7 @@ def make_distributed_train_step(cfg: ModelConfig, opt: Optimizer, mesh,
 
     def local_step_zero(params, opt_state, batch, gates, fault=None,
                         thresh=None):
-        (loss, metrics), grads = loss_of(params, batch, gates)
+        (loss, metrics), grads = grads_of(params, batch, gates)
         if guard:
             grads, bad, n_bad_blocks = guard_local(grads, fault, thresh)
         # mixed tree: reduced shards at zero leaves (live runs
@@ -394,7 +504,7 @@ def make_distributed_train_step(cfg: ModelConfig, opt: Optimizer, mesh,
         # window. Runs the schedule proves forward-dead are never gathered
         # (zeros view, exact: their every consumer is gated off).
         full = zero3_materialize(params, sync_plan, axis_name)
-        (loss, metrics), grads = loss_of(full, batch, gates)
+        (loss, metrics), grads = grads_of(full, batch, gates)
         if guard:
             grads, bad, n_bad_blocks = guard_local(grads, fault, thresh)
         gsync = apply_zero_scatter(grads, sync_plan, axis_name)
@@ -448,7 +558,7 @@ def make_distributed_train_step(cfg: ModelConfig, opt: Optimizer, mesh,
 
         def one_replica(params, opt_state, batch, gates, fault=None,
                         thresh=None):
-            (loss, metrics), grads = loss_of(params, batch, gates)
+            (loss, metrics), grads = grads_of(params, batch, gates)
             if guard:
                 grads = jax.tree.map(
                     lambda g: g * fault.astype(g.dtype), grads)
@@ -537,11 +647,11 @@ def _reshard_opt_state(opt_state, old_plan, new_plan):
 
 def finetune_distributed(params, cfg: ModelConfig, d2: D2FTConfig,
                          opt: Optimizer, batches: Iterable, *, steps: int,
-                         mesh, use_kernel: bool = False, clip: float = 1.0,
-                         sync_mode: str = "masked",
+                         mesh, parallel=None, clip: float = 1.0,
                          refresh_every: Optional[int] = None,
-                         streamed: bool = False, opt_chunk=None,
-                         log: Optional[TrainLog] = None) -> tuple:
+                         log: Optional[TrainLog] = None,
+                         use_kernel=_UNSET, sync_mode=_UNSET,
+                         streamed=_UNSET, opt_chunk=_UNSET) -> tuple:
     """Distributed D2FT fine-tuning: plan, balance micro-batches over the
     mesh's data axis with the multiple-knapsack assigner, then drive the
     shard_map gated step. ``refresh_every=k`` re-plans the schedule every k
@@ -550,6 +660,17 @@ def finetune_distributed(params, cfg: ModelConfig, d2: D2FTConfig,
     assignment balanced for a stale schedule un-balances the new one. The
     latest rebalance/sync reports land in ``log.extras`` and every refresh
     is appended to ``log.extras["refreshes"]``.
+
+    ``parallel`` (``launch.parallel.ParallelConfig``) selects sync mode and
+    extra mesh axes; the loose ``sync_mode=``/``streamed=``/... kwargs are
+    the deprecated spelling (DeprecationWarning, may not be mixed with
+    ``parallel=``). With ``parallel.mesh.stage > 1`` every refresh also
+    re-runs the schedule-aware stage assigner
+    (``core.assignment.plan_stage_assignment``) — pipeline stages are
+    packed by the NEW schedule's live FLOP cost and the jitted step is
+    rebuilt around the new boundaries — and the per-refresh record gains a
+    ``"stages"`` report (boundaries, loads, makespan vs layer-count
+    packing, analytic bubble fraction).
 
     sync_mode="zero" runs the ZeRO-1 sync (sliced reduce-scatter +
     schedule-masked all-gather, optimizer moments sharded ~1/n_devices);
@@ -569,17 +690,28 @@ def finetune_distributed(params, cfg: ModelConfig, d2: D2FTConfig,
     on any path."""
     from repro.core.assignment import (device_sample_order,
                                        distributed_live_bounds,
-                                       plan_device_assignment)
+                                       plan_device_assignment,
+                                       plan_stage_assignment)
     from repro.core.schedule import op_counts
     from repro.sharding.sync import (backward_live_groups, grad_sync_plan,
                                      sync_byte_report, zero3_param_byte_report,
                                      zero_reshard)
+    from repro.train.pipeline import analytic_bubble_fraction
+
+    given = {k: v for k, v in dict(
+        use_kernel=use_kernel, sync_mode=sync_mode, streamed=streamed,
+        opt_chunk=opt_chunk).items() if v is not _UNSET}
+    parallel, _ = _resolve_parallel(parallel, mesh, given,
+                                    where="finetune_distributed")
+    sync_mode, use_kernel = parallel.sync_mode, parallel.use_kernel
+    S = parallel.mesh.stage
+    parallel.validate_model(cfg)
 
     log = log or TrainLog()
     opt_state = opt.init(params)
     ndev = mesh.shape["data"]
     assert sync_mode in ("masked", "zero", "zero3"), sync_mode
-    sched = assignment = sync_plan = step_fn = None
+    sched = assignment = stage_assign = sync_plan = step_fn = None
     ever_live = None
 
     def replan(batch):
@@ -613,7 +745,15 @@ def finetune_distributed(params, cfg: ModelConfig, d2: D2FTConfig,
         if sync_mode == "zero3":
             record["zero3_params"] = zero3_param_byte_report(
                 sync_plan, params, ndev)
-        return sched, assignment, sync_plan, record
+        stage_assign = None
+        if S > 1:
+            # re-pack pipeline stages for the NEW schedule's live costs —
+            # a balanced packing for a stale schedule un-balances this one
+            stage_assign, stage_rep = plan_stage_assignment(sched, S)
+            stage_rep["bubble_fraction"] = analytic_bubble_fraction(
+                stage_assign.loads, parallel.microbatches)
+            record["stages"] = stage_rep
+        return sched, assignment, stage_assign, sync_plan, record
 
     for i, batch in enumerate(batches):
         if i >= steps:
@@ -626,7 +766,8 @@ def finetune_distributed(params, cfg: ModelConfig, d2: D2FTConfig,
                 # param values whose group structure the shard layout
                 # permutes
                 params = zero_reshard(params, old_plan, None)
-            sched, assignment, sync_plan, record = replan(batch)
+            sched, assignment, stage_assign, sync_plan, record = \
+                replan(batch)
             if sync_mode == "zero":
                 # canonical -> shard layout at the first plan (zeros are
                 # layout-invariant, but a params-shaped state initialized
@@ -642,6 +783,8 @@ def finetune_distributed(params, cfg: ModelConfig, d2: D2FTConfig,
             record["step"] = i
             log.extras["rebalance"] = record["rebalance"]
             log.extras["sync"] = record["sync"]
+            if "stages" in record:
+                log.extras["stages"] = record["stages"]
             log.extras.setdefault("refreshes", []).append(record)
             step_fn = None
         B = batch["labels"].shape[0]
@@ -654,9 +797,8 @@ def finetune_distributed(params, cfg: ModelConfig, d2: D2FTConfig,
                 if use_kernel else None
             step_fn = make_distributed_train_step(
                 cfg, opt, mesh, sync_plan, clip=clip,
-                use_kernel=use_kernel, live_bounds=bounds,
-                sync_mode=sync_mode, params=params,
-                streamed=streamed, opt_chunk=opt_chunk)
+                live_bounds=bounds, params=params, parallel=parallel,
+                stage_assignment=stage_assign)
         t0 = time.perf_counter()
         params, opt_state, metrics = step_fn(params, opt_state, batch, gates)
         jax.block_until_ready(metrics["loss"])

@@ -1,0 +1,212 @@
+"""GPipe-style microbatch pipeline over shard_map stages.
+
+Runs INSIDE the shard_map body of the distributed train step, on a mesh
+with a ``stage`` axis (``launch.parallel.MeshSpec``). Each stage device
+owns a contiguous layer range chosen by the schedule-aware assigner
+(``core.assignment.assign_stages`` — stages balanced by *live* cost, not
+layer count) and the local batch is split into M microbatches that flow
+stage-to-stage through ``lax.ppermute``:
+
+* round t, stage s works microbatch ``m = clip(t - s, 0, M-1)`` and is
+  *active* when ``0 <= t - s < M`` — the classic GPipe diagonal with
+  ``M + S - 1`` rounds and bubble fraction ``(S - 1) / (M + S - 1)`` in
+  round units (``analytic_bubble_fraction`` weights it by stage loads).
+* stage 0 embeds its microbatch; every other stage consumes the
+  activation ppermuted from stage s-1 at the end of the previous round.
+* ``lax.switch`` on ``axis_index("stage")`` selects the device's static
+  layer range, so the single SPMD program stays one trace.
+* only the last stage runs the LM head; inactive-round and
+  non-last-stage contributions are ``where``/``cond``-masked to exact
+  zeros, so garbage activations in the bubble never touch the loss or
+  any gradient.
+
+The returned per-device loss/grads are PARTIAL (each stage's own layers,
+last stage's head): the step body psums loss, metrics and the grad tree
+over the stage axis — each parameter is touched by exactly the stage(s)
+that own it (the tied embedding by stage 0's lookup and the last stage's
+unembed), so the psum reassembles full-batch grads without double
+counting. After that the existing data-axis sync (masked / ZeRO-1 /
+ZeRO-3) applies unchanged, and the D2FT gates ride along per microbatch
+— a stage whose slice of the schedule is dead contributes zeros exactly
+as in the single-stage gated path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_embedding, apply_norm, softcap
+from repro.models.transformer import apply_block, fused_xent, layer_groups
+
+
+# ------------------------------------------------------------- trace hooks
+class PipelineRecorder:
+    """Trace-time pipeline counters (mirrors ``sync.ResidencyRecorder``):
+    filled while the step traces, checked against the analytic round/send
+    model by ``report()`` — the "via trace hooks" half of the bubble
+    accounting."""
+
+    def __init__(self):
+        self.boundaries: Optional[Tuple[int, ...]] = None
+        self.n_microbatches: Optional[int] = None
+        self.rounds: list = []
+        self.n_sends: int = 0
+
+    def setup(self, boundaries, n_microbatches: int):
+        self.boundaries = tuple(int(b) for b in boundaries)
+        self.n_microbatches = int(n_microbatches)
+        self.rounds = []
+        self.n_sends = 0
+
+    def round(self, t: int):
+        self.rounds.append(int(t))
+
+    def send(self):
+        self.n_sends += 1
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.rounds)
+
+    def report(self) -> dict:
+        S = len(self.boundaries) - 1
+        M = self.n_microbatches
+        expected_rounds = M + S - 1
+        expected_sends = max(expected_rounds - 1, 0)
+        return {
+            "n_stages": S,
+            "n_microbatches": M,
+            "n_rounds": self.n_rounds,
+            "n_sends": self.n_sends,
+            "expected_rounds": expected_rounds,
+            "expected_sends": expected_sends,
+            "trace_ok": (self.n_rounds == expected_rounds
+                         and self.n_sends == expected_sends),
+        }
+
+
+def analytic_bubble_fraction(loads: Sequence[float],
+                             n_microbatches: int) -> float:
+    """Idle fraction of the GPipe schedule under per-stage loads c_s:
+    total time ~ (M + S - 1) * max(c), useful work per device ~ M *
+    mean(c) — so bubble = 1 - M * mean(c) / ((M + S - 1) * max(c)).
+    Uniform loads reduce to the classic (S - 1) / (M + S - 1)."""
+    loads = np.asarray(loads, np.float64)
+    S, M = len(loads), int(n_microbatches)
+    cmax = float(loads.max())
+    if cmax <= 0:
+        return 0.0
+    return float(1.0 - (M * loads.mean()) / ((M + S - 1) * cmax))
+
+
+# ------------------------------------------------------------ layer access
+def _layer_params(params, cfg: ModelConfig, layer: int):
+    """(block params, kind) for one layer — static cycle index, so the
+    per-stage branches bake their layer ranges into the trace."""
+    n_cycles, pat, rem = layer_groups(cfg)
+    P = len(pat)
+    if layer < n_cycles * P:
+        c, i = divmod(layer, P)
+        return jax.tree.map(lambda a: a[c], params["cycles"][i]), pat[i]
+    j = layer - n_cycles * P
+    return params["rest"][j], rem[j]
+
+
+# ------------------------------------------------------------ pipeline loss
+def pipeline_loss(params, cfg: ModelConfig, tokens, labels, gates, *,
+                  boundaries: Sequence[int], n_microbatches: int,
+                  stage_axis: str = "stage", tp=None, recorder=None):
+    """Per-device pipelined gated LM loss (call inside shard_map).
+
+    tokens/labels: this data shard's [B_loc, T]; gates: (g_f, g_b) each
+    [L, B_loc, G] or None; boundaries: the stage assigner's (S+1,) layer
+    boundaries (replicated constant). Returns (loss, {"ce", "aux"}) —
+    PARTIAL per device; psum over ``stage_axis`` completes them (see
+    module docstring). ``tp`` threads the tensor-parallel spec into each
+    block; ``recorder`` is a ``PipelineRecorder`` trace hook."""
+    boundaries = tuple(int(b) for b in boundaries)
+    S_stages = len(boundaries) - 1
+    M = int(n_microbatches)
+    assert boundaries[0] == 0 and boundaries[-1] == cfg.n_layers, boundaries
+    assert all(b2 > b1 for b1, b2 in zip(boundaries, boundaries[1:])), \
+        f"empty pipeline stage in {boundaries}"
+    B, T = tokens.shape
+    assert B % M == 0, f"microbatches {M} must divide local batch {B}"
+    mb = B // M
+    cdt = jnp.dtype(cfg.compute_dtype)
+    sid = jax.lax.axis_index(stage_axis)
+
+    tok_m = tokens.reshape(M, mb, T)
+    lab_m = labels.reshape(M, mb, T)
+    if gates is not None:
+        g_f, g_b = gates
+        L, _, G = g_f.shape
+        gf_m = g_f.reshape(L, M, mb, G)
+        gb_m = g_b.reshape(L, M, mb, G)
+
+    def stage_fn(lo, hi):
+        def run(x, gf_t, gb_t):
+            aux = jnp.zeros((), jnp.float32)
+            for layer in range(lo, hi):
+                blk, kind = _layer_params(params, cfg, layer)
+                lg = (gf_t[layer], gb_t[layer]) if gates is not None \
+                    else None
+                x, a = apply_block(blk, x, kind, cfg, lg, None, False, None,
+                                   tp)
+                if a is not None:
+                    aux = aux + a["load_balance"] + a["router_z"]
+            return x, aux
+        return run
+
+    branches = [stage_fn(boundaries[s], boundaries[s + 1])
+                for s in range(S_stages)]
+
+    def head_ce(y, lab_t):
+        xf = apply_norm(params["final_norm"], y, cfg.norm)
+        if cfg.tie_embeddings:
+            logits = xf @ params["embed"]["table"].T.astype(cdt)
+        else:
+            logits = xf @ params["unembed"].astype(cdt)
+        logits = softcap(logits, cfg.logit_softcap)
+        return fused_xent(logits, lab_t)
+
+    n_rounds = M + S_stages - 1
+    perm = [(s, s + 1) for s in range(S_stages - 1)]
+    if recorder is not None:
+        recorder.setup(boundaries, M)
+    x_recv = jnp.zeros((mb, T, cfg.d_model), cdt)
+    ce_acc = jnp.zeros((), jnp.float32)
+    aux_acc = jnp.zeros((), jnp.float32)
+    for t in range(n_rounds):
+        if recorder is not None:
+            recorder.round(t)
+        m = jnp.clip(t - sid, 0, M - 1)
+        active = (t - sid >= 0) & (t - sid < M)
+        tok_t = jax.lax.dynamic_index_in_dim(tok_m, m, 0, keepdims=False)
+        lab_t = jax.lax.dynamic_index_in_dim(lab_m, m, 0, keepdims=False)
+        x0 = apply_embedding(params["embed"], tok_t).astype(cdt)
+        x_in = jnp.where(sid == 0, x0, x_recv)
+        if gates is not None:
+            gf_t = jax.lax.dynamic_index_in_dim(gf_m, m, 1, keepdims=False)
+            gb_t = jax.lax.dynamic_index_in_dim(gb_m, m, 1, keepdims=False)
+        else:
+            gf_t = gb_t = jnp.zeros((), cdt)     # unused placeholder
+        y, aux = jax.lax.switch(sid, branches, x_in, gf_t, gb_t)
+        # inactive rounds compute on bubble garbage (finite: zeros or a
+        # re-run microbatch) — mask their aux and skip the head entirely
+        aux_acc = aux_acc + jnp.where(active, aux, 0.0)
+        ce_acc = ce_acc + jax.lax.cond(
+            active & (sid == S_stages - 1),
+            head_ce, lambda y_, l_: jnp.zeros((), jnp.float32), y, lab_t)
+        if t < n_rounds - 1 and S_stages > 1:
+            if recorder is not None:
+                recorder.send()
+            x_recv = jax.lax.ppermute(y, stage_axis, perm)
+    ce = ce_acc / M
+    aux = aux_acc / M
+    return ce + aux, {"ce": ce, "aux": aux}
